@@ -1,0 +1,39 @@
+"""Paper Tables 1-2: communication cost per round, per method, per model —
+analytic accounting with the paper's exact architectures, plus measured
+aggregation-op latency (us_per_call) at those payload sizes."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.aggregation import era, sa
+from repro.core.comm import CommModel
+from .common import timed
+
+PAPER_SETUPS = [
+    # name, K, classes, params, paper FL/FD/DSFL bytes
+    ("mnist_cnn", 100, 10, 583_242, (236.1e6, 40.4e3, 4.0e6)),
+    ("fmnist_cnn", 100, 10, 2_760_228, (1.1e9, 40.4e3, 4.0e6)),
+    ("imdb_lstm", 10, 2, 646_338, (28.6e6, 176.0, 88e3)),
+    ("reuters_dnn", 10, 46, 5_194_670, (228.8e6, 93e3, 2.0e6)),
+]
+
+
+def run(fast: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for name, K, C, P, (fl_p, fd_p, ds_p) in PAPER_SETUPS:
+        cm = CommModel(K, C, P, 1000)
+        # measured ERA latency at the actual upload size (K x |o_r| x C)
+        probs = jax.nn.softmax(
+            jax.random.normal(key, (min(K, 10), 1000, C)), -1)
+        us_era, _ = timed(jax.jit(lambda p: era(p, 0.1)), probs)
+        for method, ours, paper in [("fl", cm.fl_round(), fl_p),
+                                    ("fd", cm.fd_round(), fd_p),
+                                    ("dsfl", cm.dsfl_round(), ds_p)]:
+            rel = abs(ours - paper) / paper
+            rows.append((f"comm/{name}/{method}", us_era if method == "dsfl"
+                         else 0.0,
+                         f"bytes={ours:.3e} paper={paper:.3e} err={rel:.3f}"))
+        rows.append((f"comm/{name}/dsfl_topk32", 0.0,
+                     f"bytes={cm.dsfl_topk_round(32):.3e} (beyond-paper)"))
+    return rows

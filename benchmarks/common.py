@@ -1,0 +1,169 @@
+"""Shared experiment runner for the paper-table benchmarks.
+
+Runs the four methods of the paper on the synthetic federated image task:
+  dsfl_era / dsfl_sa  - Algorithm 1 with ERA / SA aggregation
+  fl                  - Benchmark 1 (FedAvg)
+  fd                  - Benchmark 2 (federated distillation)
+  single              - one client trains alone (lower bound)
+Histories carry per-round test accuracy + cumulative communication bytes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import CommModel
+from repro.core.fd import make_fd_round
+from repro.core.fedavg import make_fedavg_round
+from repro.core.client import LocalSpec, local_update
+from repro.core.losses import accuracy
+from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
+from repro.data.pipeline import FederatedImageTask, build_image_task
+from repro.models.base import param_count
+from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
+from repro.optim import optimizers as opt_lib
+
+
+def cnn_init(k):
+    return init_mnist_cnn(k, image_hw=16, widths=(8, 16), fc=32)
+
+
+APPLY = apply_mnist_cnn
+
+
+@dataclass
+class ExpConfig:
+    K: int = 10
+    rounds: int = 15
+    local_epochs: int = 2
+    distill_epochs: int = 2
+    batch_size: int = 50
+    open_batch: int = 500
+    lr: float = 0.1
+    temperature: float = 0.1
+    gamma: float = 0.1           # FD distill regularizer weight
+    seed: int = 0
+
+
+def make_clients(key, K):
+    wk = jax.vmap(lambda k: cnn_init(k)[0])(jax.random.split(key, K))
+    sk = jax.vmap(lambda k: cnn_init(k)[1])(jax.random.split(key, K))
+    return wk, sk
+
+
+def comm_model(task: FederatedImageTask, ec: ExpConfig) -> CommModel:
+    w, s = cnn_init(jax.random.PRNGKey(0))
+    return CommModel(ec.K, task.n_classes, param_count(w) + param_count(s),
+                     min(ec.open_batch, task.open_x.shape[0]))
+
+
+def run_dsfl(task, ec: ExpConfig, aggregation="era", corrupt=None,
+             temperature=None):
+    key = jax.random.PRNGKey(ec.seed)
+    wg, sg = cnn_init(key)
+    wk, sk = make_clients(key, ec.K)
+    hp = DSFLConfig(rounds=ec.rounds, local_epochs=ec.local_epochs,
+                    distill_epochs=ec.distill_epochs, batch_size=ec.batch_size,
+                    open_batch=min(ec.open_batch, task.open_x.shape[0]),
+                    lr=ec.lr, lr_distill=ec.lr,
+                    aggregation=aggregation,
+                    temperature=ec.temperature if temperature is None
+                    else temperature, seed=ec.seed)
+    eng = DSFLEngine(APPLY, hp, make_eval_fn(APPLY, task.x_test, task.y_test),
+                     corrupt=corrupt)
+    eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients, task.open_x)
+    cm = comm_model(task, ec)
+    per_round = cm.dsfl_round()
+    for h in eng.history:
+        h["cum_bytes"] = h["round"] * per_round + cm.open_set_distribution(
+            task.open_x.shape[0], task.open_x[0].size)
+    return eng.history
+
+
+def run_fl(task, ec: ExpConfig, poison_fn=None):
+    key = jax.random.PRNGKey(ec.seed)
+    w0, s0 = cnn_init(key)
+    opt = opt_lib.make("sgd", ec.lr)
+    spec = LocalSpec(APPLY, opt, ec.local_epochs, ec.batch_size)
+    round_fn = jax.jit(make_fedavg_round(spec))
+    weights = jnp.ones((ec.K,))
+    eval_fn = make_eval_fn(APPLY, task.x_test, task.y_test)
+    cm = comm_model(task, ec)
+    history = []
+    rng = key
+    for r in range(ec.rounds):
+        rng, rk = jax.random.split(rng)
+        w0, s0 = round_fn(w0, s0, task.x_clients, task.y_clients, weights, rk)
+        if poison_fn is not None:
+            w0, s0 = poison_fn(r, w0, s0)
+        history.append({"round": r + 1, **eval_fn(w0, s0),
+                        "cum_bytes": (r + 1) * cm.fl_round()})
+    return history, (w0, s0)
+
+
+def run_fd(task, ec: ExpConfig):
+    key = jax.random.PRNGKey(ec.seed)
+    wk, sk = make_clients(key, ec.K)
+    opt = opt_lib.make("sgd", ec.lr)
+    spec = LocalSpec(APPLY, opt, ec.local_epochs, ec.batch_size)
+    round_fn = jax.jit(make_fd_round(spec, task.n_classes, ec.gamma))
+    ok = jax.vmap(opt.init)(wk)
+    eval_fn = make_eval_fn(APPLY, task.x_test, task.y_test)
+    cm = comm_model(task, ec)
+    history = []
+    rng = key
+    tg_last = None
+    for r in range(ec.rounds):
+        rng, rk = jax.random.split(rng)
+        wk, sk, ok, loss, tg = round_fn(wk, sk, ok, task.x_clients,
+                                        task.y_clients, rk)
+        tg_last = tg
+        # evaluate the mean client model (FD has no server model)
+        w_avg = jax.tree.map(lambda x: jnp.mean(x, 0), wk)
+        s_avg = jax.tree.map(lambda x: jnp.mean(x, 0), sk)
+        history.append({"round": r + 1, **eval_fn(w_avg, s_avg),
+                        "cum_bytes": (r + 1) * cm.fd_round()})
+    return history, tg_last
+
+
+def run_single(task, ec: ExpConfig):
+    """One client trains alone on its shard (paper's 'Single Client' row)."""
+    key = jax.random.PRNGKey(ec.seed)
+    w, s = cnn_init(key)
+    opt = opt_lib.make("sgd", ec.lr)
+    spec = LocalSpec(APPLY, opt, ec.local_epochs, ec.batch_size)
+    o = opt.init(w)
+    eval_fn = make_eval_fn(APPLY, task.x_test, task.y_test)
+    history = []
+    upd = jax.jit(lambda w, s, o, rk: local_update(
+        spec, w, s, o, task.x_clients[0], task.y_clients[0], rk))
+    rng = key
+    for r in range(ec.rounds):
+        rng, rk = jax.random.split(rng)
+        w, s, o, _ = upd(w, s, o, rk)
+        history.append({"round": r + 1, **eval_fn(w, s), "cum_bytes": 0})
+    return history
+
+
+def top_acc(history):
+    return max(h["test_acc"] for h in history)
+
+
+def comu_at(history, acc: float):
+    """Cumulative bytes to first reach `acc` (None if never)."""
+    for h in history:
+        if h["test_acc"] >= acc:
+            return h["cum_bytes"]
+    return None
+
+
+def timed(fn, *args, n=3, **kw):
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6, out

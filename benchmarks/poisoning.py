@@ -1,0 +1,93 @@
+"""Paper Table 4: model-poisoning (Bagdasaryan et al. replacement) attack.
+
+Main task: synthetic digits.  Backdoor task: the foreign 'fashion_noise'
+family labeled with the attacker's target classes.  The malicious model w_x
+is trained on both.  In FL the replacement upload (Eq. 19) makes the global
+model equal w_x -> backdoor succeeds.  In DS-FL the attacker can only upload
+logits of w_x, which the aggregation dilutes -> backdoor fails."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import LocalSpec, local_update, predict_probs
+from repro.core.losses import accuracy
+from repro.data.pipeline import build_image_task
+from repro.data.synthetic import make_fashion_noise
+from repro.optim import optimizers as opt_lib
+from .common import APPLY, ExpConfig, cnn_init, run_dsfl, run_fl
+
+
+def train_malicious(task, noise_x, noise_y, ec):
+    """Attacker trains on digits + backdoor data jointly."""
+    key = jax.random.PRNGKey(99)
+    w, s = cnn_init(key)
+    x = jnp.concatenate([task.x_clients.reshape((-1,) + task.x_clients.shape[2:]),
+                         noise_x], 0)
+    y = jnp.concatenate([task.y_clients.reshape(-1), noise_y], 0)
+    opt = opt_lib.make("sgd", ec.lr)
+    spec = LocalSpec(APPLY, opt, 8, ec.batch_size)
+    o = opt.init(w)
+    w, s, o, _ = jax.jit(lambda w, s, o, rk: local_update(
+        spec, w, s, o, x, y, rk))(w, s, o, key)
+    return w, s
+
+
+def run(fast: bool = True):
+    ec = ExpConfig(K=4 if fast else 10, rounds=4 if fast else 12,
+                   open_batch=200, seed=3)
+    task = build_image_task(seed=3, K=ec.K, n_private=800, n_open=400,
+                            n_test=400, distribution="iid")
+    kb = jax.random.PRNGKey(42)
+    noise_x, noise_y = make_fashion_noise(kb, 800)
+    bd_test_x, bd_test_y = make_fashion_noise(jax.random.fold_in(kb, 1), 400)
+    w_x, s_x = train_malicious(task, noise_x, noise_y, ec)
+
+    rows = []
+    main_x = float(accuracy(APPLY(w_x, s_x, task.x_test, False)[0],
+                            task.y_test))
+    bd_x = float(accuracy(APPLY(w_x, s_x, bd_test_x, False)[0], bd_test_y))
+    rows.append(("table4/malicious_model", 0.0,
+                 f"main={main_x:.3f} backdoor={bd_x:.3f}"))
+
+    # --- FL: replacement attack every 5 rounds (Eq. 17-19 net effect) ---
+    def poison_fn(r, w0, s0):
+        if r % 5 == 0:
+            return w_x, s_x
+        return w0, s0
+
+    hist, (w0, s0) = run_fl(task, ec, poison_fn=poison_fn)
+    main = float(accuracy(APPLY(w0, s0, task.x_test, False)[0], task.y_test))
+    bd = float(accuracy(APPLY(w0, s0, bd_test_x, False)[0], bd_test_y))
+    rows.append(("table4/fl_poisoned", 0.0,
+                 f"main={main:.3f} backdoor={bd:.3f} (paper: 98.9/90.4)"))
+
+    # --- DS-FL: attacker uploads w_x's logits ---
+    def corrupt(probs, xo, rng):
+        mal = predict_probs(APPLY, w_x, s_x, xo)
+        return probs.at[0].set(mal)
+
+    for agg in ("sa", "era"):
+        h = run_dsfl(task, ec, agg, corrupt=corrupt)
+        # evaluate backdoor on server model: rerun engine to get w_g? use
+        # history accuracy for main; backdoor measured via a fresh engine run
+        rows.append((f"table4/dsfl_{agg}_main", 0.0,
+                     f"main={max(x['test_acc'] for x in h):.3f}"))
+    # backdoor accuracy of DS-FL server model
+    from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
+    key = jax.random.PRNGKey(ec.seed)
+    wg, sg = cnn_init(key)
+    wk = jax.vmap(lambda k: cnn_init(k)[0])(jax.random.split(key, ec.K))
+    sk = jax.vmap(lambda k: cnn_init(k)[1])(jax.random.split(key, ec.K))
+    hp = DSFLConfig(rounds=ec.rounds, local_epochs=ec.local_epochs,
+                    distill_epochs=ec.distill_epochs, batch_size=ec.batch_size,
+                    open_batch=200, aggregation="era", seed=ec.seed)
+    eng = DSFLEngine(APPLY, hp, make_eval_fn(APPLY, task.x_test, task.y_test),
+                     corrupt=corrupt)
+    _, _, wg, sg = eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients,
+                           task.open_x)
+    bd = float(accuracy(APPLY(wg, sg, bd_test_x, False)[0], bd_test_y))
+    main = float(accuracy(APPLY(wg, sg, task.x_test, False)[0], task.y_test))
+    rows.append(("table4/dsfl_era_server", 0.0,
+                 f"main={main:.3f} backdoor={bd:.3f} (paper: 97.9/8.7)"))
+    return rows

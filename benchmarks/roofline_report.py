@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json):
+per (arch x shape x mesh) — the three terms, bottleneck, useful-FLOPs ratio.
+Run ``python -m repro.launch.dryrun --all --mesh both`` first."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_records(tag_filter: str = ""):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        name = os.path.basename(p)
+        if tag_filter and tag_filter not in name:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(fast: bool = True):
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline/missing", 0.0,
+                 "run repro.launch.dryrun first")]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    fail = [r for r in recs if r.get("status") == "fail"]
+    skip = [r for r in recs if r.get("status") == "skipped"]
+    rows.append(("roofline/summary", 0.0,
+                 f"ok={len(ok)} fail={len(fail)} skipped={len(skip)}"))
+    for r in ok:
+        if "t_compute" not in r:
+            continue
+        dom = r["bottleneck"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+            f"tc={r['t_compute']*1e3:.2f}ms tm={r['t_memory']*1e3:.2f}ms "
+            f"tx={r['t_collective']*1e3:.2f}ms dom={dom} "
+            f"useful={r['useful_ratio']:.3f} "
+            f"mem/dev={(r['memory_analysis']['argument_size'] + r['memory_analysis']['temp_size'])/1e9:.1f}GB"))
+    for r in fail:
+        rows.append((f"roofline/FAIL/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     0.0, r.get("error", "?")[:120]))
+    return rows

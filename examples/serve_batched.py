@@ -1,0 +1,23 @@
+"""Batched-request serving demo: prefill a batch of prompts, then greedy
+decode with ring-buffer KV caches (dense) or O(1) SSM state (mamba).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_mod.main(["--arch", args.arch, "--smoke",
+                    "--batch", str(args.batch), "--prompt-len", "32",
+                    "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

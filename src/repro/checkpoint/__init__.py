@@ -1,0 +1,1 @@
+from .msgpack_ckpt import load_pytree, save_pytree  # noqa

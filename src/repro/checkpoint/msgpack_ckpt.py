@@ -1,0 +1,59 @@
+"""Msgpack pytree checkpointing (no orbax/flax dependency).
+
+Leaves are stored as {dtype, shape, raw bytes}; the tree structure is encoded
+as nested msgpack maps/lists.  ``load_pytree`` optionally device_puts each
+leaf to a target sharding (sharding-aware restore for the launcher)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_LEAF = "__leaf__"
+
+
+def _pack(tree):
+    if isinstance(tree, dict):
+        return {str(k): _pack(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": [_pack(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    arr = np.asarray(tree)
+    return {_LEAF: True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack(node, shard_fn=None):
+    if isinstance(node, dict) and node.get(_LEAF):
+        arr = np.frombuffer(node["data"], dtype=node["dtype"]
+                            ).reshape(node["shape"])
+        if shard_fn is not None:
+            return shard_fn(arr)
+        return jnp.asarray(arr)
+    if isinstance(node, dict) and "__seq__" in node:
+        seq = [_unpack(v, shard_fn) for v in node["__seq__"]]
+        return tuple(seq) if node.get("__tuple__") else seq
+    return {k: _unpack(v, shard_fn) for k, v in node.items()}
+
+
+def save_pytree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, shardings=None):
+    """shardings: optional pytree of jax.sharding.Sharding matching the file's
+    structure; leaves are placed directly onto their shards."""
+    with open(path, "rb") as f:
+        raw = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    if shardings is None:
+        return _unpack(raw)
+    tree = _unpack(raw)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)

@@ -1,0 +1,17 @@
+"""The paper's own four evaluation models (§4.1), exposed as configs so the
+benchmark drivers can select them by id.  These use the smallnets substrate
+(exact Keras-convention param counts; see models/smallnets.py)."""
+from ..models.smallnets import make_smallnet
+
+PAPER_MODELS = {
+    "paper-mnist-cnn": dict(name="mnist_cnn"),
+    "paper-fmnist-cnn": dict(name="fmnist_cnn"),
+    "paper-imdb-lstm": dict(name="imdb_lstm"),
+    "paper-reuters-dnn": dict(name="reuters_dnn"),
+}
+
+
+def make_paper_model(arch_id: str, **kw):
+    spec = dict(PAPER_MODELS[arch_id])
+    spec.update(kw)
+    return make_smallnet(spec.pop("name"), **spec)

@@ -1,0 +1,5 @@
+# The paper's primary contribution: the DS-FL protocol (Algorithm 1), its
+# ERA aggregation operator, the FedAvg/FD benchmarks, attack models and
+# communication accounting.
+from . import aggregation, attacks, client, comm, fd, fedavg, llm_dsfl, \
+    losses, protocol  # noqa

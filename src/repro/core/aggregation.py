@@ -1,0 +1,87 @@
+"""Logit aggregation operators (paper Section 3).
+
+Clients upload per-sample probability vectors over the open-batch.  The server
+aggregates them into the global logit:
+
+  * SA  (Eq. 16): simple average.
+  * ERA (Eq. 13): softmax(average / T) with T << 1 (paper: T = 0.1) —
+    intentionally reduces entropy of the ambiguous non-IID average.
+  * weighted ERA: reliability-weighted average (paper §5 "future work",
+    implemented here as an extension).
+  * top-k sparsified exchange: beyond-paper communication optimization for
+    large-vocab models; ERA is applied after densifying the mean.
+
+The fused mean+sharpen Pallas kernel lives in ``repro.kernels.era_sharpen``;
+``era(..., use_kernel=True)`` routes through it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def sa(local_probs: jax.Array) -> jax.Array:
+    """local_probs: (K, ..., C) -> (..., C).  Simple aggregation (Eq. 16)."""
+    return jnp.mean(local_probs.astype(F32), axis=0)
+
+
+def era(local_probs: jax.Array, temperature: float = 0.1,
+        use_kernel: bool = False) -> jax.Array:
+    """Entropy-reduction aggregation (Eq. 13): sharpen the mean."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.era_sharpen(local_probs, temperature)
+    mean = sa(local_probs)
+    return jax.nn.softmax(mean / temperature, axis=-1)
+
+
+def weighted_era(local_probs: jax.Array, weights: jax.Array,
+                 temperature: float = 0.1) -> jax.Array:
+    """Reliability-weighted ERA. weights: (K,) nonneg, normalized here."""
+    w = weights.astype(F32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+    mean = jnp.einsum("k,k...->...", w, local_probs.astype(F32))
+    return jax.nn.softmax(mean / temperature, axis=-1)
+
+
+def aggregate(local_probs: jax.Array, method: str = "era",
+              temperature: float = 0.1, weights=None,
+              use_kernel: bool = False) -> jax.Array:
+    if method == "sa":
+        return sa(local_probs)
+    if method == "era":
+        return era(local_probs, temperature, use_kernel)
+    if method == "weighted_era":
+        assert weights is not None
+        return weighted_era(local_probs, weights, temperature)
+    raise ValueError(method)
+
+
+# -------------------------- top-k sparsified exchange (beyond paper) ---------
+def topk_compress(probs: jax.Array, k: int):
+    """probs: (..., C) -> (values (..., k), indices (..., k)) renormalized.
+    The upload payload is k*(4+4) bytes/sample instead of C*4."""
+    v, i = jax.lax.top_k(probs, k)
+    v = v / jnp.maximum(jnp.sum(v, axis=-1, keepdims=True), 1e-9)
+    return v.astype(F32), i.astype(jnp.int32)
+
+
+def topk_decompress(values: jax.Array, indices: jax.Array, C: int) -> jax.Array:
+    """Densify a sparsified distribution back to (..., C)."""
+    out = jnp.zeros(values.shape[:-1] + (C,), F32)
+    return jnp.put_along_axis(out, indices.astype(jnp.int32),
+                              values.astype(F32), axis=-1, inplace=False)
+
+
+def era_topk(local_values: jax.Array, local_indices: jax.Array, C: int,
+             temperature: float = 0.1, k_out: int | None = None):
+    """Aggregate sparsified client uploads: densify -> mean -> sharpen.
+    Optionally re-sparsify the global logit for the broadcast leg."""
+    dense = jax.vmap(lambda v, i: topk_decompress(v, i, C))(
+        local_values, local_indices)
+    g = era(dense, temperature)
+    if k_out is not None:
+        return topk_compress(g, k_out)
+    return g

@@ -1,0 +1,69 @@
+"""Attack models from paper Section 4.1 "(2-7) Attack settings".
+
+  * noisy labels    - each client independently relabels C source classes to
+                      C false classes (all clients are attackers; worst case);
+  * noisy open data - inject N semantically-foreign samples into the open set;
+  * model poisoning - Bagdasaryan et al. replacement attack (Eqs. 17-19) for
+                      FL, and its DS-FL port (malicious client uploads logits
+                      of a backdoored model w_x and never updates it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def noisy_label_map(key, n_classes: int, C: int) -> jax.Array:
+    """Per-client class remap (n_classes,): C distinct source classes are sent
+    to C distinct false classes; others map to themselves."""
+    ks, kf = jax.random.split(key)
+    src = jax.random.permutation(ks, n_classes)[:C]
+    dst = jax.random.permutation(kf, n_classes)[:C]
+    table = jnp.arange(n_classes)
+    return table.at[src].set(dst)
+
+
+def apply_noisy_labels(key, labels: jax.Array, n_classes: int, C: int):
+    """labels: (K, I) -> noised labels; each client gets its own remap."""
+    K = labels.shape[0]
+    maps = jax.vmap(lambda k: noisy_label_map(k, n_classes, C))(
+        jax.random.split(key, K))                         # (K, C)
+    return jax.vmap(lambda m, y: jnp.take(m, y))(maps, labels)
+
+
+def mix_noisy_open(open_x: jax.Array, noise_x: jax.Array, key) -> jax.Array:
+    """Append foreign samples to the open set and shuffle (noisy-open attack)."""
+    allx = jnp.concatenate([open_x, noise_x], axis=0)
+    return jnp.take(allx, jax.random.permutation(key, allx.shape[0]), axis=0)
+
+
+# ----------------------------- model poisoning -------------------------------
+def poison_fl_upload(w_backdoor, w_global, K: int):
+    """Eq. 19: the upload that replaces the FedAvg global model with
+    w_backdoor after averaging: w_M = K*w_x - (K-1)*w_g."""
+    return jax.tree.map(
+        lambda wx, wg: (K * wx.astype(jnp.float32)
+                        - (K - 1) * wg.astype(jnp.float32)).astype(wx.dtype),
+        w_backdoor, w_global)
+
+
+def make_logit_poison(apply_fn, w_backdoor, s_backdoor, malicious_idx: int = 0):
+    """DS-FL port of the attack: client `malicious_idx` always uploads the
+    backdoored model's logits on the open batch (never its trained model)."""
+
+    def corrupt(probs, rng, xo=None):
+        # probs: (K, n, C); replace one client's row.  The caller closes over
+        # xo via functools.partial when building the round.
+        return probs
+
+    return corrupt
+
+
+def logit_poison_probs(apply_fn, w_x, s_x, xo):
+    logits, _ = apply_fn(w_x, s_x, xo, False)
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def replace_client_probs(probs: jax.Array, malicious_probs: jax.Array,
+                         idx: int = 0) -> jax.Array:
+    return probs.at[idx].set(malicious_probs)

@@ -1,0 +1,67 @@
+"""Loss functions (fp32 statistics).  The distillation loss has a fused
+Pallas path (`repro.kernels.distill_loss`) selected by ``use_kernel``."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def log_softmax(logits):
+    x = logits.astype(F32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = x - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def softmax_xent(logits, labels_onehot, mask=None):
+    """Cross-entropy vs hard one-hot or soft targets. logits: (..., C)."""
+    ls = log_softmax(logits)
+    ce = -jnp.sum(labels_onehot.astype(F32) * ls, axis=-1)
+    if mask is not None:
+        ce = ce * mask
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def xent_int_labels(logits, labels, mask=None):
+    """CE with integer labels, avoids materializing one-hots over big vocabs."""
+    ls = log_softmax(logits)
+    ce = -jnp.take_along_axis(ls, labels[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    if mask is not None:
+        ce = ce * mask
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def distill_xent(student_logits, teacher_probs, mask=None, use_kernel=False):
+    """KD loss: CE(teacher_probs || softmax(student_logits)).  This is the
+    DS-FL "6. Distillation" objective (Eq. 10) with the global logit as soft
+    target."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.distill_loss(student_logits, teacher_probs, mask)
+    return softmax_xent(student_logits, teacher_probs, mask)
+
+
+def topk_distill_xent(student_logits, topk_p, topk_i, mask=None):
+    """KD against a sparsified teacher: sum over the k kept entries only.
+    topk_p: (..., k) renormalized probs; topk_i: (..., k) vocab indices."""
+    ls = log_softmax(student_logits)
+    sel = jnp.take_along_axis(ls, topk_i.astype(jnp.int32), axis=-1)
+    ce = -jnp.sum(topk_p.astype(F32) * sel, axis=-1)
+    if mask is not None:
+        ce = ce * mask
+        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def entropy(probs, axis=-1):
+    p = probs.astype(F32)
+    return -jnp.sum(p * jnp.log(jnp.clip(p, 1e-12, 1.0)), axis=axis)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))

@@ -1,0 +1,79 @@
+"""Federated data partitioners (paper §4.1 "Data partitions").
+
+* ``iid``            - shuffle, split into K equal shards.
+* ``shard_non_iid``  - the paper's strong non-IID: sort by label, cut into
+                       ``shards_per_client * K`` shards, deal S per client
+                       (McMahan et al. scheme; S=2 in the paper).
+* ``dirichlet``      - Dirichlet(alpha) label-skew (weak..strong via alpha).
+* ``ratio_non_iid``  - 2-class 9:1/1:9 split (the paper's IMDb partition).
+All return index arrays (K, I_k) so callers can gather fixed-size stacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def iid(key, n: int, K: int) -> jnp.ndarray:
+    per = n // K
+    perm = jax.random.permutation(key, n)
+    return perm[: per * K].reshape(K, per)
+
+
+def shard_non_iid(key, labels, K: int, shards_per_client: int = 2):
+    """Paper's strong non-IID: each client ends up with ~shards_per_client
+    distinct classes."""
+    n = labels.shape[0]
+    S = shards_per_client * K
+    shard_size = n // S
+    order = jnp.argsort(labels, stable=True)
+    shards = order[: S * shard_size].reshape(S, shard_size)
+    assign = jax.random.permutation(key, S).reshape(K, shards_per_client)
+    return shards[assign].reshape(K, shards_per_client * shard_size)
+
+
+def dirichlet(key, labels, K: int, alpha: float, n_classes: int):
+    """Label-skew partition; returns equal-size index stacks (truncated)."""
+    labels_np = np.asarray(labels)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    idx_by_class = [np.where(labels_np == c)[0] for c in range(n_classes)]
+    for a in idx_by_class:
+        rng.shuffle(a)
+    client_lists = [[] for _ in range(K)]
+    for c in range(n_classes):
+        props = rng.dirichlet(np.full(K, alpha))
+        cuts = (np.cumsum(props) * len(idx_by_class[c])).astype(int)[:-1]
+        for k, part in enumerate(np.split(idx_by_class[c], cuts)):
+            client_lists[k].extend(part.tolist())
+    size = min(len(l) for l in client_lists)
+    out = np.stack([rng.permutation(np.array(l))[:size] for l in client_lists])
+    return jnp.asarray(out, jnp.int32)
+
+
+def ratio_non_iid(key, labels, K: int, major_ratio: float = 0.9):
+    """Binary-task partition: half the clients are 9:1 positive, half 1:9."""
+    labels_np = np.asarray(labels)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    pos = rng.permutation(np.where(labels_np == 1)[0])
+    neg = rng.permutation(np.where(labels_np == 0)[0])
+    per = len(labels_np) // K
+    n_major = int(per * major_ratio)
+    n_minor = per - n_major
+    out, pi, ni = [], 0, 0
+    for k in range(K):
+        if k % 2 == 0:
+            sel = np.concatenate([pos[pi:pi + n_major], neg[ni:ni + n_minor]])
+            pi += n_major
+            ni += n_minor
+        else:
+            sel = np.concatenate([neg[ni:ni + n_major], pos[pi:pi + n_minor]])
+            ni += n_major
+            pi += n_minor
+        out.append(rng.permutation(sel))
+    return jnp.asarray(np.stack(out), jnp.int32)
+
+
+def gather_clients(x, y, idx):
+    """idx: (K, I) -> stacked client arrays (K, I, ...)."""
+    return jnp.take(x, idx, axis=0), jnp.take(y, idx, axis=0)

@@ -1,0 +1,60 @@
+"""Dataset assembly for federated experiments: private/open split, client
+stacks, and LLM-scale token batching."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import partition, synthetic
+
+
+@dataclass
+class FederatedImageTask:
+    x_clients: jax.Array      # (K, I_k, H, W, 1)
+    y_clients: jax.Array      # (K, I_k)
+    open_x: jax.Array         # (I_o, H, W, 1)
+    x_test: jax.Array
+    y_test: jax.Array
+    n_classes: int
+
+
+def build_image_task(seed: int, K: int, n_private: int, n_open: int,
+                     n_test: int, distribution: str = "non_iid",
+                     hw: int = 16, n_classes: int = 10,
+                     noisy_open: int = 0) -> FederatedImageTask:
+    key = jax.random.PRNGKey(seed)
+    kp, ko, kt, kd, kn = jax.random.split(key, 5)
+    x, y = synthetic.make_digits(kp, n_private, n_classes, hw)
+    open_x, _ = synthetic.make_digits(ko, n_open, n_classes, hw)
+    x_test, y_test = synthetic.make_digits(kt, n_test, n_classes, hw)
+    if distribution == "iid":
+        idx = partition.iid(kd, n_private, K)
+    elif distribution == "non_iid":
+        idx = partition.shard_non_iid(kd, y, K, 2)
+    elif distribution.startswith("dirichlet"):
+        alpha = float(distribution.split(":")[1])
+        idx = partition.dirichlet(kd, y, K, alpha, n_classes)
+    else:
+        raise ValueError(distribution)
+    xc, yc = partition.gather_clients(x, y, idx)
+    if noisy_open:
+        noise_x, _ = synthetic.make_fashion_noise(kn, noisy_open, n_classes, hw)
+        from ..core.attacks import mix_noisy_open
+        open_x = mix_noisy_open(open_x, noise_x, kn)
+    return FederatedImageTask(xc, yc, open_x, x_test, y_test, n_classes)
+
+
+def lm_private_batches(key, n_clients: int, batch: int, seq: int, vocab: int):
+    """Per-client private token batches for the pod-scale DS-FL round:
+    domain d <-> client d (structurally non-IID)."""
+    toks, dom = synthetic.make_token_lm(key, n_clients * batch, seq, vocab,
+                                        n_domains=n_clients)
+    order = jnp.argsort(dom, stable=True)
+    return {"tokens": toks[order].reshape(n_clients, batch, seq)}
+
+
+def lm_open_batch(key, batch: int, seq: int, vocab: int):
+    toks, _ = synthetic.make_token_lm(key, batch, seq, vocab, n_domains=7)
+    return {"tokens": toks}

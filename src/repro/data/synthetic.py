@@ -1,0 +1,114 @@
+"""Synthetic datasets (the container is offline; MNIST/F-MNIST/IMDb/Reuters
+are replaced by structurally-analogous procedural data, see DESIGN.md §7).
+
+* ``digits``      - 10-class image task (MNIST stand-in): smooth per-class
+                    templates + affine jitter + pixel noise.  Classes share
+                    low-frequency structure so inter-class similarity exists
+                    (the property knowledge distillation relies on).
+* ``fashion_noise`` - a *different* template family (plays Fashion-MNIST's
+                    role as foreign/noisy/backdoor data).
+* ``bow``         - Reuters stand-in: class-conditional sparse bag-of-words.
+* ``token_lm``    - synthetic LM streams: per-domain Markov chains over a
+                    Zipf vocabulary (non-IID across domains/clients).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------ images ---
+def _templates(seed: int, n_classes: int, hw: int, grid: int = 4) -> np.ndarray:
+    """Smooth class templates: bilinear-upsampled random coarse grids."""
+    rng = np.random.default_rng(seed)
+    coarse = rng.normal(size=(n_classes, grid, grid)).astype(np.float32)
+    # bilinear upsample to (hw, hw)
+    xs = np.linspace(0, grid - 1, hw)
+    x0 = np.clip(np.floor(xs).astype(int), 0, grid - 2)
+    fx = (xs - x0).astype(np.float32)
+    rows = (coarse[:, x0] * (1 - fx[None, :, None])
+            + coarse[:, x0 + 1] * fx[None, :, None])          # (C, hw, grid)
+    cols = (rows[:, :, x0] * (1 - fx[None, None, :])
+            + rows[:, :, x0 + 1] * fx[None, None, :])         # (C, hw, hw)
+    t = cols - cols.mean(axis=(1, 2), keepdims=True)
+    return t / (t.std(axis=(1, 2), keepdims=True) + 1e-6)
+
+
+def make_digits(key, n: int, n_classes: int = 10, hw: int = 16,
+                template_seed: int = 1234, noise: float = 0.35):
+    """Returns x: (n, hw, hw, 1) float32, y: (n,) int32."""
+    kc, ks, kn = jax.random.split(key, 3)
+    templates = jnp.asarray(_templates(template_seed, n_classes, hw))
+    y = jax.random.randint(kc, (n,), 0, n_classes)
+    base = templates[y]                                       # (n, hw, hw)
+    shifts = jax.random.randint(ks, (n, 2), -2, 3)
+
+    def jitter(img, sh):
+        return jnp.roll(jnp.roll(img, sh[0], axis=0), sh[1], axis=1)
+
+    imgs = jax.vmap(jitter)(base, shifts)
+    imgs = imgs + noise * jax.random.normal(kn, imgs.shape)
+    return imgs[..., None].astype(jnp.float32), y.astype(jnp.int32)
+
+
+def make_fashion_noise(key, n: int, n_classes: int = 10, hw: int = 16):
+    """Foreign image family (different template seed + sharper texture)."""
+    x, y = make_digits(key, n, n_classes, hw, template_seed=777, noise=0.5)
+    kh = jax.random.fold_in(key, 99)
+    texture = jax.random.normal(kh, x.shape) * 0.4
+    return (x + jnp.sign(texture) * 0.3).astype(jnp.float32), y
+
+
+# ------------------------------------------------------------------- bow -----
+def make_bow(key, n: int, n_classes: int = 20, vocab: int = 1000,
+             words_per_doc: int = 40):
+    """Class-conditional sparse binary bag-of-words (Reuters stand-in)."""
+    kt, kd, kw = jax.random.split(key, 3)
+    topic = jax.random.dirichlet(kt, jnp.ones((vocab,)) * 0.05, (n_classes,))
+    y = jax.random.randint(kd, (n,), 0, n_classes)
+    docs = jax.vmap(
+        lambda k, p: jnp.zeros((vocab,)).at[
+            jax.random.choice(k, vocab, (words_per_doc,), p=p)].set(1.0)
+    )(jax.random.split(kw, n), topic[y])
+    return docs.astype(jnp.float32), y.astype(jnp.int32)
+
+
+# --------------------------------------------------------------- token LM ----
+def make_token_lm(key, n_seqs: int, seq_len: int, vocab: int,
+                  n_domains: int = 4, order_mix: float = 0.7):
+    """Synthetic LM corpus: each sequence follows a domain-specific first-order
+    Markov chain mixed with a Zipf unigram; domain id doubles as the non-IID
+    partition key.  Returns tokens (n_seqs, seq_len) int32, domains (n_seqs,)."""
+    kd, kt = jax.random.split(key)
+    domains = jax.random.randint(kd, (n_seqs,), 0, n_domains)
+    rng = np.random.default_rng(4321)
+    zipf = 1.0 / (np.arange(1, vocab + 1) ** 1.1)
+    zipf /= zipf.sum()
+    # per-domain block-diagonal-ish transition bias
+    doms = []
+    for d in range(n_domains):
+        lo = (vocab * d) // n_domains
+        hi = (vocab * (d + 1)) // n_domains
+        p = zipf.copy()
+        p[lo:hi] *= 20.0
+        doms.append(p / p.sum())
+    dom_p = jnp.asarray(np.stack(doms), jnp.float32)          # (D, V)
+
+    def gen_seq(k, d):
+        p = dom_p[d]
+
+        def step(carry, kk):
+            prev = carry
+            mix = order_mix * p + (1 - order_mix) \
+                * jax.nn.one_hot((prev * 7 + 13) % vocab, vocab)
+            nxt = jax.random.choice(kk, vocab, p=mix)
+            return nxt, nxt
+
+        k0, kr = jax.random.split(k)
+        first = jax.random.choice(k0, vocab, p=p)
+        _, toks = jax.lax.scan(step, first, jax.random.split(kr, seq_len - 1))
+        return jnp.concatenate([first[None], toks])
+
+    tokens = jax.vmap(gen_seq)(jax.random.split(kt, n_seqs), domains)
+    return tokens.astype(jnp.int32), domains.astype(jnp.int32)

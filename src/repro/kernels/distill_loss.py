@@ -1,0 +1,100 @@
+"""Vocab-blocked fused KD cross-entropy (the DS-FL "6. Distillation" loss).
+
+CE(t || softmax(z)) per row, streaming over vocabulary tiles with an online
+logsumexp — the full softmax is never materialized in HBM, which is the
+memory hot-spot of distillation at LLM vocab sizes (bs x seq x 202k).
+
+Grid: (N / bn, V / bv) with the vocab axis innermost; fp32 running
+(max, sumexp, teacher-dot, teacher-mass) live in VMEM scratch across vocab
+steps.  The backward kernel recomputes softmax from the saved per-row logZ.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _fwd_kernel(z_ref, t_ref, loss_ref, lz_ref, m_s, l_s, td_s, tm_s, *,
+                nv: int):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        td_s[...] = jnp.zeros_like(td_s)
+        tm_s[...] = jnp.zeros_like(tm_s)
+
+    z = z_ref[...].astype(F32)                                # (bn, bv)
+    t = t_ref[...].astype(F32)
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, jnp.max(z, axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(jnp.exp(z - m_new[:, None]), axis=-1)
+    m_s[...] = m_new
+    td_s[...] = td_s[...] + jnp.sum(t * z, axis=-1)
+    tm_s[...] = tm_s[...] + jnp.sum(t, axis=-1)
+
+    @pl.when(v == nv - 1)
+    def _finish():
+        logz = m_s[...] + jnp.log(l_s[...])
+        loss_ref[...] = tm_s[...] * logz - td_s[...]
+        lz_ref[...] = logz
+
+
+def _bwd_kernel(z_ref, t_ref, lz_ref, tm_ref, gscale_ref, dz_ref):
+    z = z_ref[...].astype(F32)
+    t = t_ref[...].astype(F32)
+    p = jnp.exp(z - lz_ref[...][:, None])
+    g = gscale_ref[0]
+    dz_ref[...] = (g * (p * tm_ref[...][:, None] - t)).astype(dz_ref.dtype)
+
+
+def distill_loss_fwd_pallas(z: jax.Array, t: jax.Array, block_n: int = 256,
+                            block_v: int = 2048, interpret: bool = True):
+    """z, t: (N, V) -> (per-row loss (N,), logZ (N,))."""
+    N, V = z.shape
+    bn = min(block_n, N)
+    bv = min(block_v, V)
+    assert N % bn == 0 and V % bv == 0, (N, bn, V, bv)
+    grid = (N // bn, V // bv)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, nv=V // bv),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bv), lambda n, v: (n, v)),
+                  pl.BlockSpec((bn, bv), lambda n, v: (n, v))],
+        out_specs=[pl.BlockSpec((bn,), lambda n, v: (n,)),
+                   pl.BlockSpec((bn,), lambda n, v: (n,))],
+        out_shape=[jax.ShapeDtypeStruct((N,), F32),
+                   jax.ShapeDtypeStruct((N,), F32)],
+        scratch_shapes=[pltpu.VMEM((bn,), F32) for _ in range(4)],
+        interpret=interpret,
+    )(z, t)
+
+
+def distill_loss_bwd_pallas(z, t, logz, tmass, gscale, block_n: int = 256,
+                            block_v: int = 2048, interpret: bool = True):
+    """Gradient wrt z: gscale * (softmax(z) * tmass - t). gscale: (1,) f32."""
+    N, V = z.shape
+    bn = min(block_n, N)
+    bv = min(block_v, V)
+    grid = (N // bn, V // bv)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bv), lambda n, v: (n, v)),
+                  pl.BlockSpec((bn, bv), lambda n, v: (n, v)),
+                  pl.BlockSpec((bn,), lambda n, v: (n,)),
+                  pl.BlockSpec((bn,), lambda n, v: (n,)),
+                  pl.BlockSpec((1,), lambda n, v: (0,))],
+        out_specs=pl.BlockSpec((bn, bv), lambda n, v: (n, v)),
+        out_shape=jax.ShapeDtypeStruct((N, V), z.dtype),
+        interpret=interpret,
+    )(z, t, logz, tmass, gscale)

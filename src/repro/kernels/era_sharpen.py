@@ -1,0 +1,44 @@
+"""Fused ERA kernel: mean over the client axis + temperature softmax.
+
+On TPU this fuses the server's "4. Aggregation" (Eq. 13) into one VMEM pass:
+the (K, bn, C) tile is averaged on the VPU and sharpened without writing the
+intermediate mean back to HBM.  Row blocks tile N; the class dim stays whole
+in VMEM (classification regime, C <= ~32k; the large-vocab LLM path uses the
+top-k sparsified exchange instead — see core/aggregation.era_topk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(probs_ref, out_ref, *, inv_temp: float, K: int):
+    # probs_ref: (K, bn, C) f32 in VMEM; out_ref: (bn, C)
+    p = probs_ref[...].astype(F32)
+    mean = jnp.sum(p, axis=0) * (1.0 / K)                     # (bn, C)
+    s = mean * inv_temp
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    out_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(out_ref.dtype)
+
+
+def era_sharpen_pallas(local_probs: jax.Array, temperature: float,
+                       block_n: int = 8, interpret: bool = True) -> jax.Array:
+    """local_probs: (K, N, C) -> (N, C) f32."""
+    K, N, C = local_probs.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, inv_temp=1.0 / temperature, K=K),
+        grid=grid,
+        in_specs=[pl.BlockSpec((K, block_n, C), lambda n: (0, n, 0))],
+        out_specs=pl.BlockSpec((block_n, C), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, C), F32),
+        interpret=interpret,
+    )(local_probs)

@@ -1,0 +1,82 @@
+"""Jit-ready wrappers around the Pallas kernels (with custom VJPs where the
+training path needs gradients).  ``interpret=True`` everywhere in this
+container (CPU validation); on real TPU hardware flip `INTERPRET` off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .distill_loss import distill_loss_bwd_pallas, distill_loss_fwd_pallas
+from .era_sharpen import era_sharpen_pallas
+from .ssd_chunk import ssd_chunk_pallas
+
+INTERPRET = True          # CPU container: interpret mode; TPU target: False
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------ era_sharpen ----
+def era_sharpen(local_probs: jax.Array, temperature: float = 0.1) -> jax.Array:
+    """(K, N, C) -> (N, C).  Teacher construction — not differentiated."""
+    K, N, C = local_probs.shape
+    bn = 8
+    while N % bn:
+        bn //= 2
+    out = era_sharpen_pallas(jax.lax.stop_gradient(local_probs), temperature,
+                             block_n=max(bn, 1), interpret=INTERPRET)
+    return out
+
+
+# ------------------------------------------------------------ distill loss ---
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def distill_loss_2d(z: jax.Array, t: jax.Array) -> jax.Array:
+    losses, _ = distill_loss_fwd_pallas(z, t, interpret=INTERPRET)
+    return jnp.mean(losses)
+
+
+def _dl_fwd(z, t):
+    losses, logz = distill_loss_fwd_pallas(z, t, interpret=INTERPRET)
+    tmass = jnp.sum(t.astype(F32), axis=-1)
+    return jnp.mean(losses), (z, t, logz, tmass)
+
+
+def _dl_bwd(res, g):
+    z, t, logz, tmass = res
+    n = z.shape[0]
+    gscale = jnp.reshape(g.astype(F32) / n, (1,))
+    dz = distill_loss_bwd_pallas(z, t, logz, tmass, gscale,
+                                 interpret=INTERPRET)
+    return dz, None
+
+
+distill_loss_2d.defvjp(_dl_fwd, _dl_bwd)
+
+
+def distill_loss(student_logits: jax.Array, teacher_probs: jax.Array,
+                 mask=None) -> jax.Array:
+    """Arbitrary leading dims; mask unsupported on the kernel path (falls back
+    to the reference implementation when given)."""
+    if mask is not None:
+        from ..core.losses import softmax_xent
+        return softmax_xent(student_logits, teacher_probs, mask)
+    V = student_logits.shape[-1]
+    z = student_logits.reshape(-1, V)
+    t = teacher_probs.reshape(-1, V)
+    return distill_loss_2d(z, t)
+
+
+# -------------------------------------------------------------- ssd chunk ----
+def ssd_chunk(xr, dtr, dAr, Br, Cr, hpg: int) -> jax.Array:
+    """Drop-in replacement for models.ssm._chunk_local:
+    xr: (B, nc, Q, H, P) etc. -> (B, nc, Q, H, P) fp32."""
+    B, nc, Q, H, P = xr.shape
+    G, N = Br.shape[3], Br.shape[4]
+    x2 = xr.reshape(B * nc, Q, H, P)
+    dt2 = dtr.reshape(B * nc, Q, H)
+    dA2 = dAr.reshape(B * nc, Q, H)
+    B2 = Br.reshape(B * nc, Q, G, N)
+    C2 = Cr.reshape(B * nc, Q, G, N)
+    y = ssd_chunk_pallas(x2, dt2, dA2, B2, C2, interpret=INTERPRET)
+    return y.reshape(B, nc, Q, H, P)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def era_sharpen_ref(local_probs: jax.Array, temperature: float) -> jax.Array:
+    """(K, N, C) client probs -> (N, C) sharpened global logit (Eq. 13)."""
+    mean = jnp.mean(local_probs.astype(F32), axis=0)
+    return jax.nn.softmax(mean / temperature, axis=-1)
+
+
+def distill_loss_ref(student_logits: jax.Array, teacher_probs: jax.Array):
+    """(N, V) -> per-row soft-target CE (N,) in fp32."""
+    x = student_logits.astype(F32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lz = m + jnp.log(jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True))
+    ls = x - lz
+    return -jnp.sum(teacher_probs.astype(F32) * ls, axis=-1)
+
+
+def distill_loss_grad_ref(student_logits, teacher_probs, g):
+    """d(mean loss)/d logits given upstream scalar cotangent g."""
+    x = student_logits.astype(F32)
+    p = jax.nn.softmax(x, axis=-1)
+    t = teacher_probs.astype(F32)
+    tmass = jnp.sum(t, axis=-1, keepdims=True)
+    n = x.shape[0]
+    return (g / n) * (p * tmass - t)
+
+
+def ssd_chunk_ref(x, dt, dA, Bm, Cm):
+    """Within-chunk SSD block (the quadratic 'diagonal' term).
+
+    x: (M, Q, H, P); dt/dA: (M, Q, H); Bm/Cm: (M, Q, G, N) -> y: (M, Q, H, P).
+    """
+    M, Q, H, P = x.shape
+    G = Bm.shape[2]
+    hpg = H // G
+    cum = jnp.cumsum(dA.astype(F32), axis=1)                  # (M, Q, H)
+    T = cum[:, :, None, :] - cum[:, None, :, :]               # (M, Q, Q, H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, :, :, None], jnp.exp(T), 0.0)
+    Bh = jnp.repeat(Bm.astype(F32), hpg, axis=2)              # (M, Q, H, N)
+    Ch = jnp.repeat(Cm.astype(F32), hpg, axis=2)
+    scores = jnp.einsum("mqhn,mkhn->mqkh", Ch, Bh)            # (M, Q, Q, H)
+    W = scores * L * dt.astype(F32)[:, None, :, :]            # dt over k axis
+    return jnp.einsum("mqkh,mkhp->mqhp", W, x.astype(F32))

@@ -1,0 +1,61 @@
+"""Pallas kernel for the within-chunk ('diagonal') SSD block of Mamba2.
+
+Per (chunk, head) tile: scores = (C B^T) * exp(segsum(dA)) * dt, y = scores x.
+Tile shapes are MXU-aligned for the production configs (Q=256, N=128, P=64):
+the (Q, N) x (N, Q) and (Q, Q) x (Q, P) matmuls hit the systolic array and
+the whole working set (~Q*(2N+P+Q) fp32 ~ 0.6 MB) sits in VMEM.
+
+Grid: (M, H) with M = batch * n_chunks; B/C blocks are indexed by the head's
+group (GQA-style head->group map done in the BlockSpec index_map).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref):
+    # x: (1, Q, 1, P); dt/dA: (1, Q, 1); b/c: (1, Q, 1, N); y: (1, Q, 1, P)
+    x = x_ref[0, :, 0, :].astype(F32)                         # (Q, P)
+    dt = dt_ref[0, :, 0].astype(F32)                          # (Q,)
+    dA = dA_ref[0, :, 0].astype(F32)
+    B = b_ref[0, :, 0, :].astype(F32)                         # (Q, N)
+    C = c_ref[0, :, 0, :].astype(F32)
+    Q = x.shape[0]
+
+    cum = jnp.cumsum(dA)
+    T = cum[:, None] - cum[None, :]                           # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(T), 0.0)
+    scores = jnp.dot(C, B.T, preferred_element_type=F32)      # (Q, Q)
+    W = scores * L * dt[None, :]
+    y_ref[0, :, 0, :] = jnp.dot(W, x, preferred_element_type=F32)
+
+
+def ssd_chunk_pallas(x, dt, dA, Bm, Cm, interpret: bool = True):
+    """x: (M, Q, H, P); dt/dA: (M, Q, H); Bm/Cm: (M, Q, G, N) -> (M, Q, H, P).
+    fp32 output (cast by the caller)."""
+    M, Q, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    grid = (M, H)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda m, h: (m, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda m, h: (m, 0, h)),
+            pl.BlockSpec((1, Q, 1), lambda m, h: (m, 0, h)),
+            pl.BlockSpec((1, Q, 1, N), lambda m, h: (m, 0, h // hpg, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda m, h: (m, 0, h // hpg, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda m, h: (m, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, Q, H, P), F32),
+        interpret=interpret,
+    )(x, dt, dA, Bm, Cm)

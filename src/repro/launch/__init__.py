@@ -1,0 +1,1 @@
+from . import mesh, roofline, sharding, specs  # noqa  (dryrun sets XLA_FLAGS; import explicitly)

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  512 placeholder host devices back the production
+# meshes; smoke tests and benches import other modules and see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct inputs — no allocation — and record
+memory/cost/collective analysis for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Methodology (see EXPERIMENTS.md §Dry-run for the two caveats that force it):
+  * PROVE pass: the full config lowers + compiles with the layer stack under
+    ``lax.scan`` — small HLO, fast SPMD partitioning; memory_analysis comes
+    from this artifact (that is what must fit per chip).
+  * COST pass: XLA's cost_analysis counts while-loop bodies ONCE, so scanned
+    FLOPs are wrong by ~n_blocks.  We therefore compile the same architecture
+    at 2 and 4 blocks with the scan unrolled (full width — sharding behaviour
+    identical) and extrapolate:  per_block = (m4 - m2)/2;
+    total = m2 - 2*per_block + n_blocks*per_block.  Exact for homogeneous
+    stacks, which all ten architectures are (per pattern-repeat).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, get_config, list_archs
+from ..core.llm_dsfl import (LLMDsflHP, dsfl_client_step, dsfl_round_step,
+                             predict_open_probs)
+from ..models.api import model_decode_step
+from ..models.shardctx import axis_ctx
+from .mesh import make_production_mesh
+from .roofline import Roofline, collective_bytes, model_flops_estimate
+from .sharding import batch_specs, cache_specs, param_specs, to_named
+from .specs import input_specs
+
+SKIPS = {
+    # (arch, shape): reason — documented in DESIGN.md §4
+    ("whisper-small", "long_500k"):
+        "enc-dec with 1.5k-frame encoder and absolute positions has no "
+        "500k-token decode mode; windowed variant would be a degenerate port",
+}
+
+RESULTS_DIR = "experiments/dryrun"
+
+
+def reduced(cfg, n_blocks: int):
+    """Same architecture at full width with n_blocks pattern-repeats."""
+    kw = {"n_layers": n_blocks * len(cfg.pattern)}
+    if cfg.arch_type == "audio":
+        kw["enc_layers"] = n_blocks
+    return cfg.replace(**kw)
+
+
+def build_step(cfg, shape, mesh, *, multi_pod: bool, topk: int | None = None,
+               hp_kw: dict | None = None, unroll: bool = False,
+               fsdp: bool = True):
+    """Returns (jitted_fn, args, step_name, ecfg, batch_axes)."""
+    n_clients = 2 if (multi_pod and shape.kind == "train") else 1
+    spec = input_specs(cfg, shape, n_clients=n_clients, topk=topk)
+    ecfg = spec["cfg"].replace(scan_unroll=unroll)
+    hp = LLMDsflHP(topk=topk, **(hp_kw or {}))
+    client_axis = "pod" if n_clients > 1 else None
+    pspec = to_named(mesh, param_specs(ecfg, spec["params"], mesh,
+                                       client_axis=client_axis, fsdp=fsdp))
+
+    if shape.kind == "train":
+        if n_clients > 1:
+            fn = functools.partial(dsfl_round_step, ecfg, hp=hp)
+            in_sh = (pspec,
+                     to_named(mesh, batch_specs(spec["private"], mesh,
+                                                client_axis="pod")),
+                     to_named(mesh, batch_specs(spec["open"], mesh)))
+            args = (spec["params"], spec["private"], spec["open"])
+            name = "dsfl_round_step"
+        else:
+            fn = functools.partial(dsfl_client_step, ecfg, hp=hp)
+            in_sh = (pspec,
+                     to_named(mesh, batch_specs(spec["private"], mesh)),
+                     to_named(mesh, batch_specs(spec["open"], mesh)),
+                     to_named(mesh, batch_specs(spec["teacher"], mesh)))
+            args = (spec["params"], spec["private"], spec["open"],
+                    spec["teacher"])
+            name = "dsfl_client_step"
+    elif shape.kind == "prefill":
+        fn = functools.partial(predict_open_probs, ecfg)
+        in_sh = (pspec, to_named(mesh, batch_specs(spec["open"], mesh)))
+        args = (spec["params"], spec["open"])
+        name = "predict_open_probs"
+    else:
+        fn = functools.partial(model_decode_step, ecfg)
+        cspec = to_named(mesh, cache_specs(ecfg, spec["cache"], mesh,
+                                           shape.global_batch))
+        tspec = to_named(mesh, batch_specs(
+            {"token": spec["token"], "pos": spec["pos"]}, mesh))
+        in_sh = (pspec, cspec, tspec["token"], tspec["pos"])
+        args = (spec["params"], spec["cache"], spec["token"], spec["pos"])
+        name = "serve_step"
+    jitted = jax.jit(fn, in_shardings=in_sh)
+    batch_axes = ("data",) if (n_clients > 1 or not multi_pod) \
+        else ("pod", "data")
+    return jitted, args, name, ecfg, batch_axes
+
+
+def _compile(cfg, shape, mesh, multi_pod, topk, hp_kw, unroll, fsdp=True):
+    jitted, args, name, ecfg, batch_axes = build_step(
+        cfg, shape, mesh, multi_pod=multi_pod, topk=topk, hp_kw=hp_kw,
+        unroll=unroll, fsdp=fsdp)
+    t0 = time.time()
+    with axis_ctx(mesh, batch_axes=batch_axes):
+        lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, name, ecfg, round(t1 - t0, 1), round(t2 - t1, 1)
+
+
+def _measure(compiled):
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll, "coll_total": float(sum(coll.values()))}
+
+
+def _extrapolate_n(ma: dict, mb: dict, na: int, nb: int,
+                   n_blocks: int) -> dict:
+    """Linear-in-blocks extrapolation from measurements at na and nb blocks."""
+    out = {}
+    span = nb - na
+    for k in ("flops", "bytes", "coll_total"):
+        pb = (mb[k] - ma[k]) / span
+        out[k] = max(ma[k] - na * pb + n_blocks * pb, 0.0)
+    coll = {}
+    kinds = set(ma["coll"]) | set(mb["coll"])
+    for kind in kinds:
+        a, b = ma["coll"].get(kind, 0), mb["coll"].get(kind, 0)
+        pb = (b - a) / span
+        coll[kind] = max(a - na * pb + n_blocks * pb, 0.0)
+    out["coll"] = coll
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            topk: int | None = None, hp_kw: dict | None = None,
+            verbose: bool = True, tag: str = "", cost_pass: bool = True,
+            cfg_mod=None, fsdp: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shape = SHAPES[shape_name]
+    # resume: skip combos already recorded as ok/skipped
+    done = os.path.join(RESULTS_DIR,
+                        f"{arch}_{shape_name}_{mesh_name}{tag}.json")
+    if os.path.exists(done):
+        with open(done) as f:
+            prev = json.load(f)
+        if prev.get("status") in ("ok", "skipped") and \
+                (prev.get("status") == "skipped" or not cost_pass
+                 or "t_compute" in prev):
+            if verbose:
+                print(f"[SKIP-DONE] {arch} x {shape_name} x {mesh_name}",
+                      flush=True)
+            return prev
+    if (arch, shape_name) in SKIPS:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+        _save(rec, tag)
+        return rec
+    cfg = get_config(arch)
+    if cfg_mod is not None:
+        cfg = cfg_mod(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        # ---- PROVE: full config, scanned; train uses grad accumulation ----
+        # (the COST pass uses microbatches=1: total FLOPs are identical and
+        # scan bodies are only counted once — see §Dry-run methodology; the
+        # x8 FSDP re-gather traffic of accumulation is discussed in §Perf)
+        hp_prove = dict(hp_kw or {})
+        if shape.kind == "train":
+            hp_prove.setdefault("microbatches", 8)
+        compiled, step_name, ecfg, lower_s, compile_s = _compile(
+            cfg, shape, mesh, multi_pod, topk, hp_prove, unroll=False,
+            fsdp=fsdp)
+        mem = compiled.memory_analysis()
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "step": step_name, "status": "ok",
+               "lower_s": lower_s, "compile_s": compile_s,
+               "memory_analysis": {
+                   "argument_size": mem.argument_size_in_bytes,
+                   "output_size": mem.output_size_in_bytes,
+                   "temp_size": mem.temp_size_in_bytes,
+                   "code_size": mem.generated_code_size_in_bytes}}
+        # ---- COST: 2/4-block unrolled extrapolation (single-pod roofline) --
+        if cost_pass:
+            c2, *_ = _compile(reduced(cfg, 1), shape, mesh, multi_pod, topk,
+                              hp_kw, unroll=True, fsdp=fsdp)
+            c4, *_ = _compile(reduced(cfg, 2), shape, mesh, multi_pod, topk,
+                              hp_kw, unroll=True, fsdp=fsdp)
+            ext = _extrapolate_n(_measure(c2), _measure(c4), 1, 2,
+                                 cfg.n_blocks)
+            rl = Roofline.from_terms(
+                arch=arch, shape=shape_name, mesh_name=mesh_name,
+                step=step_name, flops=ext["flops"], bytes_accessed=ext["bytes"],
+                coll=ext["coll"], n_devices=mesh.devices.size,
+                model_flops=model_flops_estimate(ecfg, shape),
+                mem=mem)
+            rec.update(rl.to_dict())
+            if verbose:
+                per_dev_gb = (mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes) / 1e9
+                print(f"[OK] {arch} x {shape_name} x {mesh_name} ({step_name})"
+                      f" compile {compile_s}s | args+temp {per_dev_gb:.2f} GB/dev"
+                      f" | t_comp {rl.t_compute*1e3:.1f}ms"
+                      f" t_mem {rl.t_memory*1e3:.1f}ms"
+                      f" t_coll {rl.t_collective*1e3:.1f}ms -> {rl.bottleneck}"
+                      f" | useful {rl.useful_ratio:.2f}", flush=True)
+        elif verbose:
+            per_dev_gb = (mem.argument_size_in_bytes
+                          + mem.temp_size_in_bytes) / 1e9
+            print(f"[OK] {arch} x {shape_name} x {mesh_name} ({step_name}) "
+                  f"compile {compile_s}s | args+temp {per_dev_gb:.2f} GB/dev",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 — dry-run failures are findings
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "fail", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: "
+                  f"{rec['error'][:300]}", flush=True)
+    _save(rec, tag)
+    return rec
+
+
+def _save(rec: dict, tag: str = ""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"
+    with open(os.path.join(RESULTS_DIR, name.replace("/", "_")), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--topk", type=int, default=None,
+                    help="sparsified logit exchange (beyond-paper opt)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="prove-only (skip the 2/4-block cost pass)")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                # roofline cost pass only on the single-pod mesh (§Roofline)
+                results.append(run_one(arch, shape, multi_pod=mp,
+                                       topk=args.topk, tag=args.tag,
+                                       cost_pass=(not args.no_cost) and not mp))
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    print(f"\n{ok} ok / {sk} skipped / {len(results) - ok - sk} failed "
+          f"of {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production meshes.  Functions, not module-level constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (TPU v5e pod).
+    Multi-pod: 2x16x16 = 512 chips; the leading "pod" axis doubles as the
+    DS-FL federated-client axis (DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_smoke_mesh(*, multi_pod: bool = False):
+    """Same axis names on however many real devices exist (CPU tests)."""
+    n = len(jax.devices())
+    shape = (1, 1, n) if multi_pod else (1, n)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)

@@ -1,0 +1,68 @@
+"""Batched serving driver: prefill + greedy decode with the ring-buffer KV
+cache / SSM state.  This is the substrate behind the decode_32k / long_500k
+dry-run shapes; at smoke scale it runs end-to-end on CPU.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..models.api import (model_decode_step, model_init, model_prefill)
+from .train import extra_inputs
+
+
+def serve(cfg, params, batch: dict, gen: int, seq_budget: int):
+    """Greedy generation. Returns (tokens (B, gen), per-step seconds)."""
+    B, S0 = batch["tokens"].shape
+    prefill_j = jax.jit(lambda p, b: model_prefill(cfg, p, b, seq_budget))
+    step_j = jax.jit(lambda p, c, t, pos: model_decode_step(cfg, p, c, t, pos))
+    logits, cache = prefill_j(params, batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out, times = [tok], []
+    pos0 = S0 + (cfg.n_patches if cfg.arch_type == "vlm" else 0)
+    for i in range(gen - 1):
+        t0 = time.time()
+        logits, cache = step_j(params, cache, tok, jnp.int32(pos0 + i))
+        logits.block_until_ready()
+        times.append(time.time() - t0)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, 1), times
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.PRNGKey(args.seed)
+    params = model_init(cfg, key)
+    kt, ke = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(
+        kt, (args.batch, args.prompt_len), 0, cfg.vocab, jnp.int32)}
+    batch.update(extra_inputs(cfg, args.batch, ke))
+    seq_budget = args.prompt_len + args.gen + \
+        (cfg.n_patches if cfg.arch_type == "vlm" else 0)
+    toks, times = serve(cfg, params, batch, args.gen, seq_budget)
+    print(f"generated {toks.shape} tokens; "
+          f"decode {1e3 * sum(times) / max(len(times), 1):.1f} ms/step")
+    print(toks[0])
+
+
+if __name__ == "__main__":
+    main()

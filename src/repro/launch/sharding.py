@@ -1,0 +1,192 @@
+"""Per-leaf PartitionSpec rules: Megatron TP over "model", FSDP over "data",
+expert parallelism over "model", and the DS-FL federated-client axis "pod".
+
+Rules are name-based (the param tree uses stable leaf names) with divisibility
+guards: a dim is sharded over an axis only when evenly divisible — GSPMD
+uneven sharding of jit arguments is rejected (verified in this container), so
+non-divisible dims fall back to replication.  Head counts not divisible by the
+model-axis width (qwen1.5-4b: 20, llama4: 40, phi3-medium: 40, whisper: 12)
+leave attention head-replicated on the TP axis; the §Perf log quantifies and
+addresses this.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.base import ModelConfig
+
+
+def _ax(mesh, name):
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _ok(dim_size: int, axis_size: int) -> bool:
+    return axis_size > 1 and dim_size % axis_size == 0 and dim_size >= axis_size
+
+
+class Ruler:
+    def __init__(self, cfg: ModelConfig, mesh, fsdp: bool = True):
+        self.cfg = cfg
+        self.d = _ax(mesh, "data") if fsdp else 1
+        self.m = _ax(mesh, "model")
+        c = cfg
+        self.q_tp = _ok(c.eff_heads, self.m) if c.n_heads else False
+        self.kv_tp = _ok(c.eff_kv_heads, self.m) if c.n_kv_heads else False
+        # attention TP only when BOTH q and kv heads split evenly (GQA groups
+        # must stay aligned to shards)
+        self.attn_tp = self.q_tp and self.kv_tp
+
+    def D(self, n):     # FSDP data-axis candidate
+        return "data" if _ok(n, self.d) else None
+
+    def M(self, n):     # TP model-axis candidate
+        return "model" if _ok(n, self.m) else None
+
+    def leaf(self, name: str, shape: tuple[int, ...]):
+        c = self.cfg
+        s = shape
+        if name == "tok":
+            return P(self.M(s[0]), self.D(s[1]))
+        if name == "unembed":
+            return P(self.D(s[0]), self.M(s[1]))
+        if name in ("wq", "wk", "wv"):
+            tp = self.M(s[1]) if self.attn_tp else None
+            return P(self.D(s[0]) if tp else self.D(s[0]), tp)
+        if name in ("bq", "bk", "bv"):
+            return P(self.M(s[0]) if self.attn_tp else None)
+        if name == "wo":
+            tp = self.M(s[0]) if self.attn_tp else None
+            return P(tp, self.D(s[1]))
+        if name in ("w_gate", "w_up"):
+            if len(s) == 3:      # MoE (E, D, F): expert parallel
+                return P(self.M(s[0]), self.D(s[1]), None)
+            return P(self.D(s[0]), self.M(s[1]))
+        if name == "w_down":
+            if len(s) == 3:      # (E, F, D)
+                return P(self.M(s[0]), self.D(s[1]), None)
+            return P(self.M(s[0]), self.D(s[1]))
+        if name == "b_up":
+            return P(self.M(s[0]))
+        if name == "router":
+            return P(None, None)
+        if name in ("w_z", "w_x", "w_b", "w_c", "w_dt"):
+            return P(self.D(s[0]), self.M(s[1]))
+        if name in ("cw_x", "cw_b", "cw_c"):
+            return P(None, self.M(s[1]))
+        if name in ("cb_x", "cb_b", "cb_c", "norm_scale"):
+            return P(self.M(s[0]))
+        if name in ("dt_bias", "a_log", "d_skip"):
+            return P(self.M(s[0]))
+        if name == "w_out":
+            return P(self.M(s[0]), self.D(s[1]))
+        if name == "pos_dec":
+            return P(None, self.D(s[1]))
+        if name == "w" and len(s) == 2:          # patch projector
+            return P(self.D(s[0]), self.M(s[1]))
+        return P(*([None] * len(s)))             # norms, biases, misc
+
+
+_STACK_KEYS = ("blocks", "enc", "dec")
+
+
+def param_specs(cfg: ModelConfig, params, mesh, client_axis: str | None = None,
+                fsdp: bool = True):
+    """PartitionSpec pytree matching ``params`` (a tree of arrays or
+    ShapeDtypeStructs).  client_axis="pod" handles client-stacked leaves with
+    an extra leading axis sharded over pods.  ``fsdp=False`` keeps params
+    TP-only (serving mode: no per-step weight all-gathers)."""
+    r = Ruler(cfg, mesh, fsdp=fsdp)
+
+    def rule(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1]
+        shape = tuple(leaf.shape)
+        extra = 0
+        if client_axis is not None:
+            extra += 1
+        stacked = any(k in _STACK_KEYS for k in keys)
+        if stacked:
+            extra += 1
+        spec = r.leaf(name, shape[extra:])
+        lead = ()
+        if client_axis is not None:
+            lead += (client_axis,)
+        if stacked:
+            lead += (None,)
+        return P(*lead, *spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_specs(cfg: ModelConfig, cache, mesh, batch: int,
+                client_axis: str | None = None):
+    """Decode-cache shardings: batch over "data" when divisible; KV heads over
+    "model" when divisible, else the cache sequence dim over the spare axes
+    (long-context batch=1 decode shards the 500k ring buffer itself)."""
+    r = Ruler(cfg, mesh)
+    b_ax = "data" if _ok(batch, r.d) else None
+
+    def rule(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = keys[-1]
+        s = tuple(leaf.shape)
+        lead = (client_axis,) if client_axis else ()
+        # stacked leading n_blocks/L axis is s[0]
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, W, Kh, hd)
+            kh_ax = "model" if _ok(s[3], r.m) else None
+            w_candidates = []
+            if b_ax is None and _ok(s[2], r.d):
+                w_candidates.append("data")
+            if kh_ax is None and _ok(s[2], r.m):
+                w_candidates.append("model")
+            w_ax = tuple(w_candidates) if w_candidates else None
+            return P(*lead, None, b_ax, w_ax, kh_ax, None)
+        if name == "state":      # (L, B, H, P, N)
+            return P(*lead, None, b_ax, "model" if _ok(s[2], r.m) else None,
+                     None, None)
+        if name in ("conv_x", "conv_b", "conv_c"):   # (L, B, w-1, C)
+            return P(*lead, None, b_ax, None,
+                     "model" if _ok(s[3], r.m) else None)
+        return P(*([None] * len(s)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def batch_specs(batch_tree, mesh, client_axis: str | None = None,
+                vocab_axis_on: str = "model"):
+    """Input batch shardings: batch dim over ("pod","data") as divisible;
+    a trailing vocab-sized dim (teacher probs) over "model"."""
+    r_d = _ax(mesh, "data")
+    r_p = _ax(mesh, "pod") if client_axis is None else 1
+    r_m = _ax(mesh, "model")
+
+    def rule(path, leaf):
+        s = tuple(leaf.shape)
+        lead = (client_axis,) if client_axis else ()
+        off = 1 if client_axis else 0
+        if len(s) == off:       # scalar (pos)
+            return P(*lead)
+        b = s[off]
+        baxes = []
+        if client_axis is None and r_p > 1 and b % (r_p * r_d) == 0:
+            baxes = ["pod", "data"]
+        elif _ok(b, r_d):
+            baxes = ["data"]
+        spec = [tuple(baxes) if baxes else None]
+        for dim in s[off + 1:-1]:
+            spec.append(None)
+        if len(s) > off + 1:
+            last = s[-1]
+            spec.append(vocab_axis_on if (last > 1024 and _ok(last, r_m))
+                        else None)
+        return P(*lead, *spec)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

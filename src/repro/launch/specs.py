@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import LONG_CONTEXT_WINDOW, InputShape
+from ..models.api import model_init, model_init_cache
+from ..models.base import ModelConfig
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def effective_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k on full-attention archs runs the sliding-window variant
+    (DESIGN.md §4); SSM/hybrid run natively."""
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        return cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model_init(cfg, jax.random.PRNGKey(0)))
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    b = {"tokens": sds((batch, seq), I32)}
+    if cfg.arch_type == "vlm":
+        b["patches"] = sds((batch, cfg.n_patches, cfg.d_model), BF16)
+    if cfg.arch_type == "audio":
+        b["frames"] = sds((batch, cfg.n_audio_frames, cfg.d_model), BF16)
+    return b
+
+
+def teacher_struct(cfg: ModelConfig, batch: int, seq: int,
+                   topk: int | None = None):
+    if topk is not None:
+        return (sds((batch, seq, topk), F32), sds((batch, seq, topk), I32))
+    return sds((batch, seq, cfg.eff_vocab), BF16)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.arch_type == "audio":
+        frames = sds((batch, cfg.n_audio_frames, cfg.d_model), BF16)
+        params = params_struct(cfg)
+        return jax.eval_shape(
+            lambda p, f: model_init_cache(cfg, p, batch, seq_len,
+                                          {"frames": f}), params, frames)
+    return jax.eval_shape(lambda: model_init_cache(cfg, None, batch, seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                n_clients: int = 1, topk: int | None = None) -> dict:
+    """All jit inputs for the step this (arch x shape) lowers.
+
+    train  -> {params, private, open, teacher}  (DS-FL hybrid client step;
+               with n_clients > 1 the leaves gain a leading client axis for
+               the pod-sharded round step)
+    prefill-> {params, open}                    (DS-FL prediction pass)
+    decode -> {params, cache, token, pos}       (serve_step)
+    """
+    cfg = effective_config(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    params = params_struct(cfg)
+    out = {"cfg": cfg}
+    if shape.kind == "train":
+        if n_clients > 1:
+            Bc = B // n_clients
+            stack = lambda t: jax.tree.map(
+                lambda l: sds((n_clients,) + l.shape, l.dtype), t)
+            out["params"] = stack(params)
+            out["private"] = stack(batch_struct(cfg, Bc, S))
+            out["open"] = batch_struct(cfg, Bc, S)
+        else:
+            out["params"] = params
+            out["private"] = batch_struct(cfg, B, S)
+            out["open"] = batch_struct(cfg, B, S)
+            out["teacher"] = teacher_struct(cfg, B, S, topk)
+    elif shape.kind == "prefill":
+        out["params"] = params
+        out["open"] = batch_struct(cfg, B, S)
+    else:  # decode
+        out["params"] = params
+        out["cache"] = cache_struct(cfg, B, S)
+        out["token"] = sds((B,), I32)
+        out["pos"] = sds((), I32)
+    return out

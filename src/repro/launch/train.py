@@ -1,0 +1,110 @@
+"""Training driver.
+
+Two modes:
+  * ``--mode dsfl``   - the paper's protocol at LLM scale: K simulated clients
+    (vmapped; on the multi-pod mesh the client axis shards over pods), logit
+    exchange on a shared open batch, ERA aggregation, hybrid CE+KD local steps.
+  * ``--mode local``  - plain LM pretraining (the "1. Update" benchmark).
+
+On this CPU container use ``--smoke`` (reduced config).  Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
+      --mode dsfl --clients 2 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..core.llm_dsfl import (LLMDsflHP, dsfl_round_step, sgd_train_step)
+from ..data.pipeline import lm_open_batch, lm_private_batches
+from ..models.api import model_init
+from ..models.base import param_count
+from ..checkpoint import save_pytree
+
+
+def extra_inputs(cfg, batch, key):
+    out = {}
+    if cfg.arch_type == "vlm":
+        out["patches"] = jax.random.normal(
+            key, (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        ).astype(cfg.cdtype)
+    if cfg.arch_type == "audio":
+        out["frames"] = jax.random.normal(
+            key, (batch, cfg.n_audio_frames, cfg.d_model), jnp.float32
+        ).astype(cfg.cdtype)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b", choices=list_archs())
+    ap.add_argument("--mode", default="dsfl", choices=["dsfl", "local"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--aggregation", default="era", choices=["era", "sa"])
+    ap.add_argument("--topk", type=int, default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    key = jax.random.PRNGKey(args.seed)
+    K = args.clients
+    hp = LLMDsflHP(lr=args.lr, gamma=args.gamma, aggregation=args.aggregation,
+                   topk=args.topk)
+
+    print(f"arch={cfg.name} ({cfg.arch_type}) layers={cfg.n_layers} "
+          f"d={cfg.d_model} vocab={cfg.vocab}")
+    if args.mode == "dsfl":
+        stacked = jax.vmap(lambda k: model_init(cfg, k))(
+            jax.random.split(key, K))
+        print(f"params/client: {param_count(jax.tree.map(lambda x: x[0], stacked)):,}")
+        kd, ko, ke = jax.random.split(jax.random.fold_in(key, 1), 3)
+        private = lm_private_batches(kd, K, args.batch, args.seq, cfg.vocab)
+        open_b = lm_open_batch(ko, args.batch, args.seq, cfg.vocab)
+        ex = extra_inputs(cfg, args.batch, ke)
+        private.update({k: jnp.broadcast_to(v[None], (K,) + v.shape)
+                        for k, v in ex.items()})
+        open_b.update(ex)
+        step = jax.jit(lambda p, pb, ob: dsfl_round_step(cfg, p, pb, ob, hp))
+        params = stacked
+        for i in range(args.steps):
+            t0 = time.time()
+            params, loss = step(params, private, open_b)
+            loss.block_until_ready()
+            print(f"round {i:3d}  loss {float(loss):.4f}  "
+                  f"{time.time()-t0:.2f}s", flush=True)
+    else:
+        params = model_init(cfg, key)
+        print(f"params: {param_count(params):,}")
+        kd, ke = jax.random.split(jax.random.fold_in(key, 1))
+        batch = lm_open_batch(kd, args.batch, args.seq, cfg.vocab)
+        batch.update(extra_inputs(cfg, args.batch, ke))
+        step = jax.jit(lambda p, b: sgd_train_step(cfg, p, b, args.lr))
+        for i in range(args.steps):
+            t0 = time.time()
+            params, loss = step(params, batch)
+            loss.block_until_ready()
+            print(f"step {i:3d}  loss {float(loss):.4f}  "
+                  f"{time.time()-t0:.2f}s", flush=True)
+
+    if args.ckpt:
+        save_pytree(args.ckpt, params)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

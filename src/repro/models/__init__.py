@@ -1,0 +1,2 @@
+from . import api, attention, base, encdec, layers, moe, smallnets, ssm, \
+    transformer  # noqa

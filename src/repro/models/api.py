@@ -1,0 +1,58 @@
+"""Uniform model API across all architecture families.
+
+``batch`` dicts carry:  tokens (B, S) int32 — always;
+patches (B, P, D) — vlm stub embeddings;  frames (B, F, D) — audio stub.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as ED
+from . import transformer as T
+from .base import ModelConfig
+
+
+def model_init(cfg: ModelConfig, key) -> dict:
+    if cfg.arch_type == "audio":
+        return ED.init_encdec(cfg, key)
+    return T.init_lm(cfg, key)
+
+
+def model_logits(cfg: ModelConfig, params: dict, batch: dict,
+                 remat: bool = True):
+    """Full-sequence logits + aux (MoE load-balance) for train / prediction."""
+    if cfg.arch_type == "audio":
+        return ED.encdec_lm_logits(cfg, params, batch["tokens"],
+                                   batch["frames"], remat)
+    extra = batch.get("patches")
+    return T.lm_logits(cfg, params, batch["tokens"], extra, remat)
+
+
+def model_init_cache(cfg: ModelConfig, params: dict, batch_size: int,
+                     seq_len: int, batch: dict | None = None) -> dict:
+    if cfg.arch_type == "audio":
+        enc_out = ED.encode(cfg, params, batch["frames"], remat=False)
+        return ED.init_encdec_cache(cfg, params, batch_size, seq_len, enc_out)
+    return T.init_cache(cfg, batch_size, seq_len)
+
+
+def model_decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                      token: jax.Array, pos: jax.Array):
+    if cfg.arch_type == "audio":
+        return ED.encdec_decode_step(cfg, params, cache, token, pos)
+    return T.decode_step(cfg, params, cache, token, pos)
+
+
+def model_prefill(cfg: ModelConfig, params: dict, batch: dict,
+                  seq_len: int | None = None):
+    if cfg.arch_type == "audio":
+        enc_out = ED.encode(cfg, params, batch["frames"], remat=False)
+        logits = ED.decoder_logits(cfg, params, batch["tokens"], enc_out,
+                                   remat=False)
+        cache = ED.init_encdec_cache(cfg, params, batch["tokens"].shape[0],
+                                     seq_len or batch["tokens"].shape[1],
+                                     enc_out)
+        return logits[:, -1], cache
+    return T.prefill(cfg, params, batch["tokens"], batch.get("patches"),
+                     seq_len)

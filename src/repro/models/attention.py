@@ -1,0 +1,225 @@
+"""Grouped-query attention with RoPE, optional QKV bias, sliding windows,
+flash-style chunked softmax (memory-safe at 32k prefill) and a ring-buffer
+KV cache for decode.
+
+Shapes: q (B, Sq, H, hd) / k, v (B, Skv, Kh, hd); GQA groups G = H // Kh.
+All softmax statistics accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .shardctx import constrain
+from .layers import _init, apply_rope, rope_freqs
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ init ----
+def init_attn(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.eff_heads, cfg.eff_kv_heads, cfg.hd
+    if cfg.pad_heads:
+        assert cfg.n_kv_heads == cfg.n_heads, "pad_heads requires MHA" 
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": _init(ks[0], (d, h * hd), s, cfg.cdtype),
+        "wk": _init(ks[1], (d, kh * hd), s, cfg.cdtype),
+        "wv": _init(ks[2], (d, kh * hd), s, cfg.cdtype),
+        "wo": _init(ks[3], (h * hd, d), (h * hd) ** -0.5, cfg.cdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.cdtype)
+        p["bk"] = jnp.zeros((kh * hd,), cfg.cdtype)
+        p["bv"] = jnp.zeros((kh * hd,), cfg.cdtype)
+    return p
+
+
+def qkv_proj(p: dict, cfg: ModelConfig, x: jax.Array):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.eff_heads, cfg.hd)
+    k = k.reshape(B, S, cfg.eff_kv_heads, cfg.hd)
+    v = v.reshape(B, S, cfg.eff_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def head_mask(cfg: ModelConfig, o: jax.Array) -> jax.Array:
+    """Zero the padded heads so pad_heads preserves numerics exactly
+    (padded wo rows then contribute nothing and receive no gradient)."""
+    if not cfg.pad_heads or cfg.pad_heads == cfg.n_heads:
+        return o
+    mask = (jnp.arange(cfg.eff_heads) < cfg.n_heads).astype(o.dtype)
+    return o * mask[..., :, None]
+
+
+def _fit_chunk(S: int, c: int) -> int:
+    """Largest divisor of S that is <= c (static, trace-time)."""
+    c = min(c, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+# -------------------------------------------------- flash-style attention ----
+def _chunk_attn(q, k, v, q_pos, kv_pos, scale, causal, window):
+    """One (q-chunk, kv-chunk) tile.  q: (B,Kh,G,Cq,hd) k/v: (B,Ckv,Kh,hd).
+    Returns unnormalized (m, l, acc) contributions in fp32."""
+    s = jnp.einsum("bkgqd,bckd->bkgqc", q, k).astype(jnp.float32) * scale
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= kv_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (B,Kh,G,Cq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v.dtype), v).astype(jnp.float32)
+    return m, l, acc
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    q_chunk=1024, kv_chunk=1024, q_offset=0):
+    """Chunked online-softmax attention.  q: (B,Sq,H,hd), k/v: (B,Skv,Kh,hd).
+    q chunks are unrolled in Python (static triangular structure keeps causal
+    FLOPs ~halved); kv chunks run under ``lax.scan``."""
+    B, Sq, H, hd = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    scale = hd ** -0.5
+    q_chunk = _fit_chunk(Sq, q_chunk)
+    kv_chunk = _fit_chunk(Skv, kv_chunk)
+    nq, nkv = Sq // q_chunk, Skv // kv_chunk
+
+    qg = q.reshape(B, Sq, Kh, G, hd)
+    outs = []
+    for i in range(nq):
+        qi = qg[:, i * q_chunk:(i + 1) * q_chunk].transpose(0, 2, 3, 1, 4)  # B,Kh,G,Cq,hd
+        q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        # static causal/window range of kv chunks for this q chunk
+        hi = nkv
+        lo = 0
+        if causal:
+            hi = min(nkv, (q_offset + (i + 1) * q_chunk + kv_chunk - 1) // kv_chunk)
+        if window is not None:
+            lo = max(0, (q_offset + i * q_chunk - window + 1) // kv_chunk)
+        n_ch = max(hi - lo, 1)
+        ks = k[:, lo * kv_chunk:(lo + n_ch) * kv_chunk].reshape(B, n_ch, kv_chunk, Kh, hd)
+        vs = v[:, lo * kv_chunk:(lo + n_ch) * kv_chunk].reshape(B, n_ch, kv_chunk, Kh, hd)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            (kc, vc, ci) = xs
+            kv_pos = (lo + ci) * kv_chunk + jnp.arange(kv_chunk)
+            mc, lc, accc = _chunk_attn(qi, kc, vc, q_pos, kv_pos, scale, causal, window)
+            m_new = jnp.maximum(m, mc)
+            a1 = jnp.exp(m - m_new)
+            a2 = jnp.exp(mc - m_new)
+            return (m_new, l * a1 + lc * a2,
+                    acc * a1[..., None] + accc * a2[..., None]), None
+
+        m0 = jnp.full((B, Kh, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kh, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4),
+             jnp.arange(n_ch)))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,Kh,G,Cq,hd)
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype) if nq > 1 else outs[0].astype(q.dtype)
+
+
+# ------------------------------------------------------------- self-attn ----
+def attn_forward(p: dict, cfg: ModelConfig, x: jax.Array, *, positions=None,
+                 causal=True, q_chunk=1024, kv_chunk=1024) -> jax.Array:
+    """Training / prefill self-attention over the full sequence."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, cfg, x)
+    if cfg.pos_embed == "rope":
+        if positions is None:
+            positions = jnp.arange(S)
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    o = head_mask(cfg, flash_attention(q, k, v, causal=causal,
+                                       window=cfg.sliding_window,
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk))
+    return o.reshape(B, S, cfg.eff_heads * cfg.hd) @ p["wo"]
+
+
+# ----------------------------------------------------------- decode cache ----
+def init_kv_cache(cfg: ModelConfig, batch: int, window: int) -> dict:
+    kh, hd = cfg.eff_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, window, kh, hd), cfg.cdtype),
+        "v": jnp.zeros((batch, window, kh, hd), cfg.cdtype),
+    }
+
+
+def attn_decode_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, D); cache k/v: (B, W, Kh, hd) ring buffer
+    holding (RoPE'd) keys for positions (pos-W, pos-1] written at slot t % W.
+    ``pos`` is the current token's position (scalar int32)."""
+    B, _, _ = x.shape
+    W = cache["k"].shape[1]
+    q, k, v = qkv_proj(p, cfg, x)
+    if cfg.pos_embed == "rope":
+        cos, sin = rope_freqs(cfg, pos[None])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    # position held by each slot j: largest t <= pos with t ≡ j (mod W)
+    j = jnp.arange(W)
+    slot_pos = pos - ((pos - j) % W)
+    valid = (slot_pos >= 0) & (slot_pos > pos - W)
+    if cfg.sliding_window is not None:
+        valid &= slot_pos > pos - cfg.sliding_window
+
+    Kh, G, hd = cfg.eff_kv_heads, cfg.eff_heads // cfg.eff_kv_heads, cfg.hd
+    qg = q.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, ck).astype(jnp.float32) * hd ** -0.5
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", w.astype(cv.dtype), cv)
+    o = head_mask(cfg, o.reshape(B, 1, Kh * G, hd)).reshape(B, 1, Kh * G * hd) @ p["wo"]
+    return o, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------- cross-attn -----
+def cross_attn_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                       enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Decoder cross-attention (whisper).  enc_k/v precomputed: (B, Se, Kh, hd).
+    No RoPE on cross-attention."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.eff_heads, cfg.hd)
+    o = head_mask(cfg, flash_attention(q, enc_k, enc_v, causal=False))
+    return o.reshape(B, S, cfg.eff_heads * cfg.hd) @ p["wo"]
+
+
+def cross_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
+    B, Se, _ = enc_out.shape
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, Se, cfg.eff_kv_heads, cfg.hd),
+            v.reshape(B, Se, cfg.eff_kv_heads, cfg.hd))

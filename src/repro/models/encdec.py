@@ -1,0 +1,156 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the assignment carve-out the mel-spectrogram + conv feature extractor is a
+STUB: ``input_specs`` feeds precomputed frame embeddings (B, F, D).  Everything
+downstream — encoder self-attention stack, decoder with causal self-attention,
+cross-attention, learned decoder positions, KV-cached decode — is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_decode_step, attn_forward, cross_attn_forward,
+                        cross_kv, init_attn, init_kv_cache)
+from .base import ModelConfig
+from .layers import _init, embed, init_embed, init_mlp, init_rmsnorm, mlp, \
+    rmsnorm, unembed
+from .shardctx import constrain
+
+
+def _sinusoid(F: int, D: int) -> jax.Array:
+    pos = jnp.arange(F, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    ke, kp, kenc, kdec = jax.random.split(key, 4)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"n1": init_rmsnorm(cfg.d_model), "attn": init_attn(k1, cfg),
+                "n2": init_rmsnorm(cfg.d_model), "mlp": init_mlp(k2, cfg)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"n1": init_rmsnorm(cfg.d_model), "self": init_attn(k1, cfg),
+                "n2": init_rmsnorm(cfg.d_model), "cross": init_attn(k2, cfg),
+                "n3": init_rmsnorm(cfg.d_model), "mlp": init_mlp(k3, cfg)}
+
+    return {
+        "embed": init_embed(ke, cfg),
+        "pos_dec": _init(kp, (cfg.max_seq, cfg.d_model), 0.01, cfg.cdtype),
+        "enc": jax.vmap(enc_block)(jax.random.split(kenc, cfg.enc_layers)),
+        "dec": jax.vmap(dec_block)(jax.random.split(kdec, cfg.n_layers)),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, F, D) conv-stub output.  Returns encoder states."""
+    x = frames.astype(cfg.cdtype) + _sinusoid(frames.shape[1], cfg.d_model
+                                              ).astype(cfg.cdtype)
+
+    def blk(bp, h):
+        h = h + attn_forward(bp["attn"], cfg, rmsnorm(bp["n1"], h, cfg.norm_eps),
+                             causal=False)
+        h = h + mlp(bp["mlp"], cfg, rmsnorm(bp["n2"], h, cfg.norm_eps))
+        return h
+
+    f = jax.checkpoint(blk) if remat else blk
+
+    def body(h, bp):
+        return constrain(f(bp, h), "batch", None, None), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"],
+                        unroll=cfg.enc_layers if cfg.scan_unroll else 1)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decoder_logits(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                   enc_out: jax.Array, remat: bool = True) -> jax.Array:
+    """Teacher-forced decoder. tokens: (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], cfg, tokens) + params["pos_dec"][:S]
+
+    def blk(bp, h):
+        h = h + attn_forward(bp["self"], cfg, rmsnorm(bp["n1"], h, cfg.norm_eps))
+        ek, ev = cross_kv(bp["cross"], cfg, enc_out)
+        h = h + cross_attn_forward(bp["cross"], cfg,
+                                   rmsnorm(bp["n2"], h, cfg.norm_eps), ek, ev)
+        h = h + mlp(bp["mlp"], cfg, rmsnorm(bp["n3"], h, cfg.norm_eps))
+        return h
+
+    f = jax.checkpoint(blk) if remat else blk
+
+    def body(h, bp):
+        return constrain(f(bp, h), "batch", None, None), None
+
+    x, _ = jax.lax.scan(body, x, params["dec"],
+                        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return constrain(unembed(params["embed"], cfg, x), "batch", None, None)
+
+
+def encdec_lm_logits(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                     frames: jax.Array, remat: bool = True):
+    enc_out = encode(cfg, params, frames, remat)
+    logits = decoder_logits(cfg, params, tokens, enc_out, remat)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ decode ---
+def init_encdec_cache(cfg: ModelConfig, params: dict, batch: int,
+                      seq_len: int, enc_out: jax.Array) -> dict:
+    """Self-attn ring buffers + precomputed cross K/V per decoder layer."""
+    W = min(seq_len, cfg.sliding_window or seq_len)
+    kv = init_kv_cache(cfg, batch, W)
+    self_cache = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), kv)
+
+    def per_layer(bp):
+        return cross_kv(bp["cross"], cfg, enc_out)
+
+    ck, cv = jax.vmap(per_layer)(params["dec"])       # (L, B, Se, Kh, hd)
+    return {"self": self_cache, "cross_k": ck, "cross_v": cv}
+
+
+def encdec_decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                       token: jax.Array, pos: jax.Array):
+    """One decoder token. Returns (logits (B, V), new cache)."""
+    x = embed(params["embed"], cfg, token[:, None]) \
+        + jnp.take(params["pos_dec"], pos[None], axis=0)
+
+    def body(h, xs):
+        bp, sc, ck, cv = xs
+        hh = rmsnorm(bp["n1"], h, cfg.norm_eps)
+        out, nsc = attn_decode_step(bp["self"], cfg, hh, sc, pos)
+        h = h + out
+        hh = rmsnorm(bp["n2"], h, cfg.norm_eps)
+        q = hh @ bp["cross"]["wq"]
+        if "bq" in bp["cross"]:
+            q = q + bp["cross"]["bq"]
+        B = h.shape[0]
+        q = q.reshape(B, cfg.eff_heads, cfg.hd)
+        s = jnp.einsum("bhd,bshd->bhs", q, ck).astype(jnp.float32) \
+            * cfg.hd ** -0.5
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhs,bshd->bhd", w.astype(cv.dtype), cv)
+        from .attention import head_mask
+        o = head_mask(cfg, o[:, None])[:, 0]
+        h = h + (o.reshape(B, 1, cfg.eff_heads * cfg.hd) @ bp["cross"]["wo"])
+        h = h + mlp(bp["mlp"], cfg, rmsnorm(bp["n3"], h, cfg.norm_eps))
+        return h, nsc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x)[:, 0]
+    return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

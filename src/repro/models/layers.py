@@ -1,0 +1,104 @@
+"""Primitive layers: norms, MLPs, RoPE, embeddings.
+
+All functions are pure; parameters are plain dict pytrees.  Matmul inputs are
+kept in ``cfg.dtype`` (bf16 on TPU) with fp32 normalization statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms ----
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs ----
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    p = {"w_down": _init(k3, (f, d), s_out, cfg.cdtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = _init(k1, (d, f), s_in, cfg.cdtype)
+        p["w_up"] = _init(k2, (d, f), s_in, cfg.cdtype)
+    else:  # gelu / relu
+        p["w_up"] = _init(k2, (d, f), s_in, cfg.cdtype)
+        p["b_up"] = jnp.zeros((f,), cfg.cdtype)
+        p["b_down"] = jnp.zeros((d,), cfg.cdtype)
+    return p
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"] + p["b_up"], approximate=True)
+    out = h @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ------------------------------------------------------------------ RoPE ----
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions: (...,) int32 -> cos/sin of shape (..., hd/2) in fp32."""
+    hd = cfg.hd
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2)."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    if cos.ndim == 2:                       # (S, hd/2) -> broadcast over B, H
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                                   # (B, S, hd/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings ----
+def init_embed(key, cfg: ModelConfig) -> dict:
+    V = cfg.eff_vocab
+    p = {"tok": _init(key, (V, cfg.d_model), 1.0, cfg.cdtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _init(jax.random.fold_in(key, 1),
+                             (cfg.d_model, V), cfg.d_model ** -0.5, cfg.cdtype)
+    return p
+
+
+def embed(p: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype)
+
+
+def unembed(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    logits = x @ w
+    if cfg.eff_vocab != cfg.vocab:      # mask padded vocab columns to -inf
+        neg = jnp.asarray(-1e30, logits.dtype)
+        mask = jnp.arange(cfg.eff_vocab) < cfg.vocab
+        logits = jnp.where(mask, logits, neg)
+    return logits

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN with GShard-style grouped capacity dispatch.
+
+Tokens are viewed as (groups, group_size); each group dispatches at most
+``capacity`` tokens to each expert through one-hot einsums (no scatter), which
+is the TPU-idiomatic formulation: the dispatch/combine einsums lower to
+all-to-alls when the expert dim is sharded over the model axis.
+
+FLOPs are *active-expert* FLOPs (E x C x D x F with E*C ~= tokens*top_k*cf),
+so roofline compute terms reflect the MoE advantage.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import _init
+from .shardctx import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "router": _init(ks[0], (d, e), s_in, jnp.float32),
+        "w_gate": _init(ks[1], (e, d, f), s_in, cfg.cdtype),
+        "w_up": _init(ks[2], (e, d, f), s_in, cfg.cdtype),
+        "w_down": _init(ks[3], (e, f, d), s_out, cfg.cdtype),
+    }
+
+
+def capacity(cfg: ModelConfig, group_size: int) -> int:
+    c = math.ceil(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, 1)
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).  Token-choice top-k with per-group
+    capacity; overflow tokens are dropped (pass through the residual)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gs = min(cfg.moe_group_size, B * S)
+    N = B * S
+    assert N % gs == 0, (N, gs)
+    G = N // gs
+    C = capacity(cfg, gs)
+
+    xg = x.reshape(G, gs, D)
+    logits = xg.astype(jnp.float32) @ p["router"]            # (G, gs, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    # load-balance auxiliary loss (Switch/GShard style)
+    me = jnp.mean(gates, axis=1)                              # (G, E)
+    top1 = jnp.argmax(gates, axis=-1)
+    ce = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+
+    topk_g, topk_i = jax.lax.top_k(gates, K)                  # (G, gs, K)
+    topk_g = topk_g / jnp.maximum(jnp.sum(topk_g, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) inside its expert's capacity buffer
+    oh = jax.nn.one_hot(topk_i, E, dtype=jnp.int32)           # (G, gs, K, E)
+    ohf = oh.reshape(G, gs * K, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                       # (G, gs*K, E)
+    pos = jnp.sum(pos * ohf, axis=-1).reshape(G, gs, K)       # rank in expert
+    keep = pos < C
+
+    # dispatch / combine tensors
+    disp = (jax.nn.one_hot(topk_i, E, dtype=x.dtype)[..., :, None]
+            * jax.nn.one_hot(pos, C, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))          # (G, gs, K, E, C)
+    comb = disp * topk_g[..., None, None].astype(x.dtype)
+    disp = jnp.sum(disp, axis=2)                              # (G, gs, E, C)
+    comb = jnp.sum(comb, axis=2)
+
+    xin = constrain(jnp.einsum("gsec,gsd->egcd", disp, xg),
+                    "model", "batch", None, None)             # (E, G, C, D)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["w_gate"])) \
+            * jnp.einsum("egcd,edf->egcf", xin, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xin, p["w_up"]),
+                        approximate=True)
+    eout = constrain(jnp.einsum("egcf,efd->egcd", h, p["w_down"]),
+                     "model", "batch", None, None)            # (E, G, C, D)
+    out = constrain(jnp.einsum("gsec,egcd->gsd", comb, eout),
+                    "batch", None, None)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,232 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD forward: within-chunk quadratic (attention-like, MXU-friendly)
+blocks + inter-chunk linear recurrence over chunk states via ``lax.scan``.
+Decode is the O(1) recurrent step carrying (ssm_state, conv_state).
+
+The x/B/C projections and their causal convs are SEPARATE parameter leaves
+(w_x / w_b / w_c) so each output dim shards cleanly over the model axis —
+a fused xBC projection would put TP shard boundaries inside segment
+boundaries and force re-sharding collectives at the split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import _init
+from .shardctx import constrain
+
+F32 = jnp.float32
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    gn = cfg.ssm_groups * cfg.ssm_state
+    w = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    dt = jnp.exp(jax.random.uniform(ks[6], (h,), F32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "w_z": _init(ks[0], (d, di), s, cfg.cdtype),
+        "w_x": _init(ks[1], (d, di), s, cfg.cdtype),
+        "w_b": _init(ks[2], (d, gn), s, cfg.cdtype),
+        "w_c": _init(ks[3], (d, gn), s, cfg.cdtype),
+        "cw_x": _init(ks[4], (w, di), di ** -0.5, cfg.cdtype),
+        "cw_b": _init(ks[5], (w, gn), gn ** -0.5, cfg.cdtype),
+        "cw_c": _init(ks[5], (w, gn), gn ** -0.5, cfg.cdtype),
+        "cb_x": jnp.zeros((di,), cfg.cdtype),
+        "cb_b": jnp.zeros((gn,), cfg.cdtype),
+        "cb_c": jnp.zeros((gn,), cfg.cdtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(F32),  # inv softplus
+        "w_dt": _init(ks[7], (d, h), s, cfg.cdtype),
+        "a_log": jnp.zeros((h,), F32),                            # A = -exp(.)
+        "d_skip": jnp.ones((h,), F32),
+        "norm_scale": jnp.ones((di,), F32),
+        "w_out": _init(ks[0], (di, d), di ** -0.5, cfg.cdtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted slices. x: (B,S,C), w: (wlen,C)."""
+    wlen = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(wlen))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) with T[i, j] = sum_{j<k<=i} dA_k (i >= j)."""
+    cum = jnp.cumsum(dA, axis=-1)
+    T = cum[..., :, None] - cum[..., None, :]
+    Q = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, T, -jnp.inf)
+
+
+def _chunk_local(xr, dtr, dAr, Br, Cr, hpg: int) -> jax.Array:
+    """Within-chunk quadratic block (pure-jnp reference path).
+    xr: (B,nc,Q,H,P), dtr/dAr: (B,nc,Q,H), Br/Cr: (B,nc,Q,G,N)."""
+    L = jnp.exp(_segsum(dAr.transpose(0, 1, 3, 2)))            # (B,nc,H,Q,Q)
+    Bh = jnp.repeat(Br, hpg, axis=3)
+    Ch = jnp.repeat(Cr, hpg, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)          # (B,nc,H,Q,Q)
+    M = scores * L * dtr.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    return jnp.einsum("bchqk,bckhp->bcqhp", M, xr)
+
+
+def ssd_chunked(x, dt, a_log, Bm, Cm, chunk: int, kernel_fn=None,
+                return_state: bool = False):
+    """SSD over a full sequence.
+
+    x: (B,S,H,P); dt: (B,S,H) post-softplus; a_log: (H,); Bm/Cm: (B,S,G,N).
+    Returns y (B,S,H,P) fp32 (and the final state if requested).
+    ``kernel_fn`` optionally replaces the within-chunk computation with the
+    Pallas kernel (repro.kernels.ops.ssd_chunk)."""
+    Bsz, S, H, P = x.shape
+    G = Bm.shape[2]
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad the tail: dt=0 => decay exp(0)=1 and zero input contribution,
+        # so real positions and the final state are unaffected (causal)
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    hpg = H // G
+
+    A = -jnp.exp(a_log)
+    dA = dt.astype(F32) * A                                    # (B,S,H)
+    xr = x.astype(F32).reshape(Bsz, nc, Q, H, P)
+    dAr = dA.reshape(Bsz, nc, Q, H)
+    dtr = dt.astype(F32).reshape(Bsz, nc, Q, H)
+    Br = Bm.astype(F32).reshape(Bsz, nc, Q, G, N)
+    Cr = Cm.astype(F32).reshape(Bsz, nc, Q, G, N)
+
+    cum = jnp.cumsum(dAr, axis=2)
+
+    # 1. diagonal (within-chunk) blocks
+    local = kernel_fn if kernel_fn is not None else _chunk_local
+    y_diag = local(xr, dtr, dAr, Br, Cr, hpg)
+
+    # 2. per-chunk end states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    xw = xr * (dtr * decay_to_end)[..., None]
+    Bh = jnp.repeat(Br, hpg, axis=3)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", Bh, xw)          # (B,nc,H,P,N)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_body(carry, xs):
+        st, dec = xs
+        return carry * dec[:, :, None, None] + st, carry       # emit incoming
+
+    final, prev = jax.lax.scan(
+        scan_body, jnp.zeros((Bsz, H, P, N), F32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)
+
+    # 4. off-diagonal contribution
+    Ch = jnp.repeat(Cr, hpg, axis=3)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", Ch * jnp.exp(cum)[..., None], prev)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)[:, :S_orig]
+    if return_state:
+        return y, final
+    return y
+
+
+def _project(p, cfg, x):
+    """x: (B,S,D) -> (z, xs_pre, b_pre, c_pre, dt) pre-conv projections."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    b = x @ p["w_b"]
+    c = x @ p["w_c"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(F32) + p["dt_bias"])
+    return z, xs, b, c, dt
+
+
+def _gate_norm_out(p, cfg, y, z):
+    y = y * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]
+    return y.astype(cfg.cdtype) @ p["w_out"]
+
+
+def mamba_forward(p: dict, cfg: ModelConfig, x: jax.Array, kernel_fn=None,
+                  return_cache: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, D)."""
+    B, S, _ = x.shape
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z, xs_pre, b_pre, c_pre, dt = _project(p, cfg, x)
+    xs = constrain(_causal_conv(xs_pre, p["cw_x"], p["cb_x"]),
+                   "batch", None, "model").reshape(B, S, H, P)
+    Bm = _causal_conv(b_pre, p["cw_b"], p["cb_b"]).reshape(B, S, G, N)
+    Cm = _causal_conv(c_pre, p["cw_c"], p["cb_c"]).reshape(B, S, G, N)
+    res = ssd_chunked(xs, dt, p["a_log"], Bm, Cm, cfg.ssm_chunk, kernel_fn,
+                      return_state=return_cache)
+    y, final = res if return_cache else (res, None)
+    y = y + p["d_skip"][:, None] * xs.astype(F32)
+    out = _gate_norm_out(p, cfg, y.reshape(B, S, cfg.d_inner), z)
+    if return_cache:
+        w1 = cfg.ssm_conv - 1
+        cache = {"state": final,
+                 "conv_x": xs_pre[:, -w1:].astype(cfg.cdtype),
+                 "conv_b": b_pre[:, -w1:].astype(cfg.cdtype),
+                 "conv_c": c_pre[:, -w1:].astype(cfg.cdtype)}
+        return out, cache
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> dict:
+    w1 = cfg.ssm_conv - 1
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), F32),
+        "conv_x": jnp.zeros((batch, w1, cfg.d_inner), cfg.cdtype),
+        "conv_b": jnp.zeros((batch, w1, gn), cfg.cdtype),
+        "conv_c": jnp.zeros((batch, w1, gn), cfg.cdtype),
+    }
+
+
+def _conv_step(window_prev, new, w, b):
+    """window_prev: (B, wlen-1, C); new: (B, C) -> (out (B, C), new window)."""
+    window = jnp.concatenate([window_prev, new[:, None]], axis=1)
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window.astype(F32),
+                                 w.astype(F32)) + b.astype(F32))
+    return out, window[:, 1:]
+
+
+def mamba_decode_step(p: dict, cfg: ModelConfig, x: jax.Array,
+                      cache: dict) -> tuple[jax.Array, dict]:
+    """One-token recurrent step. x: (B, 1, D)."""
+    B = x.shape[0]
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    x1 = x[:, 0]
+    z = x1 @ p["w_z"]
+    dt = jax.nn.softplus((x1 @ p["w_dt"]).astype(F32) + p["dt_bias"])  # (B,H)
+    xs, ncx = _conv_step(cache["conv_x"], x1 @ p["w_x"], p["cw_x"], p["cb_x"])
+    Bm, ncb = _conv_step(cache["conv_b"], x1 @ p["w_b"], p["cw_b"], p["cb_b"])
+    Cm, ncc = _conv_step(cache["conv_c"], x1 @ p["w_c"], p["cw_c"], p["cb_c"])
+    xs = xs.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * A)
+    Bh = jnp.repeat(Bm, H // G, axis=1)
+    Ch = jnp.repeat(Cm, H // G, axis=1)
+    st = cache["state"] * dA[..., None, None] \
+        + (dt[..., None] * xs)[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch) + p["d_skip"][:, None] * xs
+    out = _gate_norm_out(p, cfg, y.reshape(B, cfg.d_inner), z)[:, None]
+    return out, {"state": st, "conv_x": ncx.astype(cfg.cdtype),
+                 "conv_b": ncb.astype(cfg.cdtype),
+                 "conv_c": ncc.astype(cfg.cdtype)}

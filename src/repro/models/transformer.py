@@ -1,0 +1,253 @@
+"""Unified decoder stack for all assigned decoder-only architectures.
+
+A model is ``cfg.n_blocks`` repetitions of ``cfg.pattern`` (a tuple of
+``(mixer, ffn)`` sub-layers).  Block parameters are stacked on a leading
+``n_blocks`` axis and executed under ``jax.lax.scan`` (small HLO, fast
+multi-pod compiles) with per-block activation remat during training.
+
+Execution modes:
+  * ``lm_logits``    - full-sequence logits (training loss / DS-FL prediction)
+  * ``prefill``      - full-sequence forward that also builds the decode cache
+  * ``decode_step``  - one token against a ring-buffer KV cache / SSM state
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .attention import (attn_decode_step, attn_forward, flash_attention,
+                        init_attn, init_kv_cache, qkv_proj)
+from .layers import (apply_rope, embed, init_embed, init_mlp, init_rmsnorm,
+                     mlp, rmsnorm, rope_freqs, unembed)
+from .moe import init_moe, moe_ffn
+from .ssm import (init_mamba, init_ssm_cache, mamba_decode_step, mamba_forward)
+from .shardctx import constrain
+
+
+# ------------------------------------------------------------------- init ----
+def _init_block(key, cfg: ModelConfig) -> dict:
+    p = {}
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        k1, k2, key = jax.random.split(key, 3)
+        p[f"s{i}_n1"] = init_rmsnorm(cfg.d_model)
+        p[f"s{i}_mix"] = init_attn(k1, cfg) if mixer == "attn" else init_mamba(k1, cfg)
+        if ffn != "none":
+            p[f"s{i}_n2"] = init_rmsnorm(cfg.d_model)
+            p[f"s{i}_ffn"] = init_moe(k2, cfg) if ffn == "moe" else init_mlp(k2, cfg)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ke, kb, kp = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(
+        jax.random.split(kb, cfg.n_blocks))
+    params = {"embed": init_embed(ke, cfg),
+              "blocks": blocks,
+              "final_norm": init_rmsnorm(cfg.d_model)}
+    if cfg.n_patches:   # VLM: projector stub from frozen vision tower (stub)
+        params["patch_proj"] = {
+            "w": (jax.random.normal(kp, (cfg.d_model, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(cfg.cdtype)}
+    return params
+
+
+# --------------------------------------------------------------- forward ----
+def _block_forward(cfg: ModelConfig, bp: dict, x: jax.Array, positions,
+                   q_chunk: int, kv_chunk: int, use_ssd_kernel: bool = False,
+                   sublayer_remat: bool = False):
+    """One pattern-repeat in full-sequence mode.  Returns (x, aux).
+    With ``sublayer_remat`` every mixer/FFN is its own checkpoint region, so
+    the backward peak holds one sub-layer's intermediates, not the whole
+    pattern-repeat's (matters for Jamba's 8-sub-layer blocks)."""
+    aux = jnp.zeros((), jnp.float32)
+    kernel_fn = None
+    if use_ssd_kernel:
+        from repro.kernels import ops as kops
+        kernel_fn = kops.ssd_chunk
+    ckpt = jax.checkpoint if sublayer_remat else (lambda f: f)
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        h = rmsnorm(bp[f"s{i}_n1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            out = ckpt(lambda p_, h_: attn_forward(
+                p_, cfg, h_, positions=positions, q_chunk=q_chunk,
+                kv_chunk=kv_chunk))(bp[f"s{i}_mix"], h)
+        else:
+            out = ckpt(lambda p_, h_: mamba_forward(
+                p_, cfg, h_, kernel_fn=kernel_fn))(bp[f"s{i}_mix"], h)
+        x = constrain(x + out, "batch", None, None)
+        if ffn != "none":
+            h = rmsnorm(bp[f"s{i}_n2"], x, cfg.norm_eps)
+            if ffn == "moe":
+                out, a = ckpt(lambda p_, h_: moe_ffn(p_, cfg, h_))(
+                    bp[f"s{i}_ffn"], h)
+                aux = aux + a
+            else:
+                out = ckpt(lambda p_, h_: mlp(p_, cfg, h_))(bp[f"s{i}_ffn"], h)
+            x = constrain(x + out, "batch", None, None)
+    return x, aux
+
+
+def backbone(cfg: ModelConfig, params: dict, x: jax.Array, *, remat: bool = True,
+             positions=None) -> tuple[jax.Array, jax.Array]:
+    """Run the scanned block stack on embeddings x: (B, S, D)."""
+    S = x.shape[1]
+    q_chunk = kv_chunk = 1024 if S >= 2048 else S
+    base_f = functools.partial(_block_forward, cfg, positions=positions,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               sublayer_remat=remat and len(cfg.pattern) > 1)
+    f = jax.checkpoint(base_f) if remat else base_f
+
+    def body(carry, bp):
+        h, aux = carry
+        h, a = f(bp, h)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"],
+                               unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    return x, aux
+
+
+def embed_inputs(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 extra_embeds=None) -> jax.Array:
+    """Token embedding; VLM prepends (stub) patch embeddings through the
+    projector.  extra_embeds: (B, S_img, D) precomputed patch features."""
+    x = embed(params["embed"], cfg, tokens)
+    if extra_embeds is not None:
+        pe = extra_embeds.astype(cfg.cdtype) @ params["patch_proj"]["w"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def lm_logits(cfg: ModelConfig, params: dict, tokens: jax.Array,
+              extra_embeds=None, remat: bool = True) -> jax.Array:
+    """Full-sequence logits (B, S_text, V).  VLM image positions are dropped
+    from the output (loss/distillation is on text tokens)."""
+    x = embed_inputs(cfg, params, tokens, extra_embeds)
+    x, aux = backbone(cfg, params, x, remat=remat)
+    if extra_embeds is not None:
+        x = x[:, extra_embeds.shape[1]:]
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = constrain(unembed(params["embed"], cfg, x),
+                       "batch", None, "model")
+    return logits, aux
+
+
+# ----------------------------------------------------------------- decode ----
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Decode cache for `seq_len` context.  Attention sub-layers get a ring
+    buffer of min(seq_len, sliding_window); mamba sub-layers O(1) state."""
+    cache = {}
+    for i, (mixer, _) in enumerate(cfg.pattern):
+        if mixer == "attn":
+            W = min(seq_len, cfg.sliding_window or seq_len)
+            one = init_kv_cache(cfg, batch, W)
+        else:
+            one = init_ssm_cache(cfg, batch)
+        cache[f"s{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_blocks,) + a.shape), one)
+    return cache
+
+
+def _block_decode(cfg: ModelConfig, bp: dict, bc: dict, x: jax.Array, pos):
+    new_cache = {}
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        h = rmsnorm(bp[f"s{i}_n1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            out, nc = attn_decode_step(bp[f"s{i}_mix"], cfg, h, bc[f"s{i}"], pos)
+        else:
+            out, nc = mamba_decode_step(bp[f"s{i}_mix"], cfg, h, bc[f"s{i}"])
+        new_cache[f"s{i}"] = nc
+        x = x + out
+        if ffn != "none":
+            h = rmsnorm(bp[f"s{i}_n2"], x, cfg.norm_eps)
+            if ffn == "moe":
+                out, _ = moe_ffn(bp[f"s{i}_ffn"], cfg, h)
+            else:
+                out = mlp(bp[f"s{i}_ffn"], cfg, h)
+            x = x + out
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, token: jax.Array,
+                pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step.  token: (B,) int32; pos: scalar int32 position.
+    Returns (logits (B, V), new_cache)."""
+    x = embed(params["embed"], cfg, token[:, None])
+
+    def body(h, xs):
+        bp, bc = xs
+        h, nc = _block_decode(cfg, bp, bc, h, pos)
+        return h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+                                unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = constrain(unembed(params["embed"], cfg, x), "batch", None, "model")
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------- prefill ----
+def _block_prefill(cfg: ModelConfig, bp: dict, x: jax.Array, positions,
+                   seq_len: int):
+    """Full-seq forward that also emits this block's decode cache."""
+    cache = {}
+    B, S, _ = x.shape
+    for i, (mixer, ffn) in enumerate(cfg.pattern):
+        h = rmsnorm(bp[f"s{i}_n1"], x, cfg.norm_eps)
+        if mixer == "attn":
+            W = min(seq_len, cfg.sliding_window or seq_len)
+            q, k, v = qkv_proj(bp[f"s{i}_mix"], cfg, h)
+            if cfg.pos_embed == "rope":
+                cos, sin = rope_freqs(cfg, positions)
+                q = apply_rope(q, cos, sin)
+                k = apply_rope(k, cos, sin)
+            o = flash_attention(q, k, v, causal=True,
+                                window=cfg.sliding_window,
+                                q_chunk=min(1024, S), kv_chunk=min(1024, S))
+            out = o.reshape(B, S, cfg.n_heads * cfg.hd) @ bp[f"s{i}_mix"]["wo"]
+            # ring-buffer layout: slot t % W holds token t of the last W
+            kl, vl = k[:, -W:], v[:, -W:]
+            if S >= W:
+                shift = S % W
+                kl = jnp.roll(kl, shift, axis=1)
+                vl = jnp.roll(vl, shift, axis=1)
+                cache[f"s{i}"] = {"k": kl, "v": vl}
+            else:
+                pad = W - S
+                z = jnp.zeros((B, pad, cfg.n_kv_heads, cfg.hd), k.dtype)
+                cache[f"s{i}"] = {"k": jnp.concatenate([kl, z], 1),
+                                  "v": jnp.concatenate([vl, z], 1)}
+        else:
+            out, cache[f"s{i}"] = mamba_forward(bp[f"s{i}_mix"], cfg, h,
+                                                return_cache=True)
+        x = x + out
+        if ffn != "none":
+            h = rmsnorm(bp[f"s{i}_n2"], x, cfg.norm_eps)
+            out = (moe_ffn(bp[f"s{i}_ffn"], cfg, h)[0] if ffn == "moe"
+                   else mlp(bp[f"s{i}_ffn"], cfg, h))
+            x = x + out
+    return x, cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            extra_embeds=None, seq_len: int | None = None):
+    """Prefill: returns (last-token logits (B, V), decode cache)."""
+    B, S = tokens.shape
+    if extra_embeds is not None:
+        S = S + extra_embeds.shape[1]
+    seq_len = seq_len or S
+    x = embed_inputs(cfg, params, tokens, extra_embeds)
+    positions = jnp.arange(S)
+
+    def body(h, bp):
+        h, cache = _block_prefill(cfg, bp, h, positions, seq_len)
+        return h, cache
+
+    x, cache = jax.lax.scan(body, x, params["blocks"],
+                            unroll=cfg.n_blocks if cfg.scan_unroll else 1)
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return unembed(params["embed"], cfg, x)[:, 0], cache

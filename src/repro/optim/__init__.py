@@ -1,0 +1,2 @@
+from .optimizers import adam, init_opt, momentum, sgd, apply_updates  # noqa
+from .schedules import constant, cosine, linear_warmup  # noqa

@@ -1,0 +1,85 @@
+"""Minimal functional optimizers (no optax dependency).
+
+API: ``opt = sgd(lr)``; ``state = init_opt(opt, params)``;
+``params, state = opt.update(grads, params, state, step)``.
+Paper settings: SGD lr=0.1 (image tasks), Adam lr=1e-3 (text tasks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable          # (grads, params, state, step) -> (params, state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, params, state, step):
+        s = _lr_at(lr, step)
+        new = jax.tree.map(lambda p, g: p - (s * g).astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, params, state, step):
+        s = _lr_at(lr, step)
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(jnp.float32),
+                           state, grads)
+        new = jax.tree.map(lambda p, v: p - (s * v).astype(p.dtype), params, vel)
+        return new, vel
+
+    return Optimizer("momentum", init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, params, state, step):
+        s = _lr_at(lr, step)
+        t = step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        new = jax.tree.map(
+            lambda p, m_, v_: p - (s * (m_ / bc1)
+                                   / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer("adam", init, update)
+
+
+def init_opt(opt: Optimizer, params):
+    return opt.init(params)
+
+
+def make(name: str, lr) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](lr)

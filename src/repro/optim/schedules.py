@@ -1,0 +1,22 @@
+"""Learning-rate schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        return jnp.float32(lr) * jnp.minimum(1.0, (step + 1) / warmup)
+    return f
+
+
+def cosine(lr: float, total: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        w = jnp.minimum(1.0, (step + 1) / max(warmup, 1)) if warmup else 1.0
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.float32(w * (floor + 0.5 * (lr - floor) * (1 + jnp.cos(jnp.pi * t))))
+    return f

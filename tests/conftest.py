@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
+# benches must see the single real device; only launch/dryrun.py fakes 512.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

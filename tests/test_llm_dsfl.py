@@ -1,0 +1,98 @@
+"""Pod-scale DS-FL round step: convergence, FedAvg equivalence, top-k path,
+microbatch-accumulation equivalence, attack surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.llm_dsfl import (LLMDsflHP, dsfl_client_step, dsfl_round_step,
+                                 fedavg_round_step, predict_open_probs)
+from repro.data.pipeline import lm_open_batch, lm_private_batches
+from repro.models.api import model_init
+
+CFG = get_config("qwen1.5-4b").smoke()
+K = 2
+
+
+def make_setup(rng, batch=4, seq=32):
+    stacked = jax.vmap(lambda k: model_init(CFG, k))(jax.random.split(rng, K))
+    private = lm_private_batches(jax.random.fold_in(rng, 1), K, batch, seq,
+                                 CFG.vocab)
+    open_b = lm_open_batch(jax.random.fold_in(rng, 2), batch, seq, CFG.vocab)
+    return stacked, private, open_b
+
+
+def test_dsfl_round_reduces_loss(rng):
+    stacked, private, open_b = make_setup(rng)
+    hp = LLMDsflHP(lr=5e-3)
+    step = jax.jit(lambda p, pb, ob: dsfl_round_step(CFG, p, pb, ob, hp))
+    losses = []
+    params = stacked
+    for _ in range(8):
+        params, loss = step(params, private, open_b)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_dsfl_round_topk_path_runs(rng):
+    stacked, private, open_b = make_setup(rng)
+    hp = LLMDsflHP(lr=5e-3, topk=8)
+    params, loss = jax.jit(
+        lambda p, pb, ob: dsfl_round_step(CFG, p, pb, ob, hp))(
+        stacked, private, open_b)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_fedavg_round_syncs_clients(rng):
+    stacked, private, _ = make_setup(rng)
+    new, loss = jax.jit(
+        lambda p, pb: fedavg_round_step(CFG, p, pb, 1e-3))(stacked, private)
+    for leaf in jax.tree.leaves(new):
+        np.testing.assert_allclose(leaf[0], leaf[1], atol=1e-6)
+
+
+def test_microbatch_accumulation_matches_full_batch(rng):
+    params = model_init(CFG, rng)
+    private = lm_open_batch(jax.random.fold_in(rng, 1), 4, 32, CFG.vocab)
+    open_b = lm_open_batch(jax.random.fold_in(rng, 2), 4, 32, CFG.vocab)
+    teacher = jax.nn.softmax(
+        jax.random.normal(rng, (4, 32, CFG.vocab)), -1).astype(jnp.bfloat16)
+    hp1 = LLMDsflHP(lr=1e-2, microbatches=1)
+    hp2 = LLMDsflHP(lr=1e-2, microbatches=2)
+    p1, l1 = dsfl_client_step(CFG, params, private, open_b, teacher, hp1)
+    p2, l2 = dsfl_client_step(CFG, params, private, open_b, teacher, hp2)
+    # CE means over microbatches == mean over full batch (equal sizes)
+    assert abs(float(l1) - float(l2)) < 5e-2
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-2, rtol=1e-2)
+
+
+def test_predict_open_probs_is_distribution(rng):
+    params = model_init(CFG, rng)
+    open_b = lm_open_batch(rng, 2, 16, CFG.vocab)
+    probs = predict_open_probs(CFG, params, open_b)
+    np.testing.assert_allclose(np.sum(np.asarray(probs, np.float32), -1),
+                               1.0, atol=2e-2)
+
+
+def test_poisoned_logits_are_diluted_by_era(rng):
+    """DS-FL's attack surface: one malicious client's adversarial logits get
+    averaged away (Table 4 mechanism) — the aggregated teacher stays closer
+    to the benign mean than to the attacker's distribution."""
+    from repro.core.aggregation import era
+    kb, km = jax.random.split(rng)
+    # benign clients share a consensus signal (they model the same task)
+    consensus = jax.random.normal(km, (1, 32, 16)) * 2.0
+    benign = jax.nn.softmax(consensus
+                            + jax.random.normal(kb, (7, 32, 16)), -1)
+    target = jax.nn.one_hot(jnp.zeros((32,), jnp.int32), 16)[None]
+    probs = jnp.concatenate([benign, target], axis=0)
+    g = era(probs, 0.1)
+    benign_mean = jnp.mean(benign, 0)
+    attacker_mass = float(jnp.mean(g[:, 0]))
+    benign_top = float(jnp.mean(jnp.max(benign_mean, -1)))
+    agree = np.mean(np.argmax(np.asarray(g), -1)
+                    == np.argmax(np.asarray(benign_mean), -1))
+    assert agree > 0.8

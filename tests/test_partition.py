@@ -1,0 +1,74 @@
+"""Property tests for the federated partitioners."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.data import partition
+
+SETTINGS = dict(deadline=None, max_examples=20,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(st.integers(40, 200), st.integers(2, 8), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_iid_partition_disjoint_and_covers(n, K, seed):
+    idx = partition.iid(jax.random.PRNGKey(seed), n, K)
+    flat = np.asarray(idx).ravel()
+    assert len(set(flat.tolist())) == len(flat)          # disjoint
+    assert idx.shape == (K, n // K)
+    assert flat.max() < n
+
+
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_shard_non_iid_disjoint(K, seed):
+    key = jax.random.PRNGKey(seed)
+    n = K * 40
+    labels = jax.random.randint(key, (n,), 0, 10)
+    idx = partition.shard_non_iid(jax.random.fold_in(key, 1), labels, K, 2)
+    flat = np.asarray(idx).ravel()
+    assert len(set(flat.tolist())) == len(flat)
+
+
+def test_shard_non_iid_limits_classes_at_paper_scale(rng):
+    """At the paper's scale (shards >> classes) each client sees ~2-4
+    classes: 2 contiguous label-sorted shards cross <= 1 boundary each."""
+    n, K = 2000, 10
+    labels = jax.random.randint(rng, (n,), 0, 10)
+    idx = partition.shard_non_iid(jax.random.fold_in(rng, 1), labels, K, 2)
+    labels_np = np.asarray(labels)
+    counts = [len(set(labels_np[np.asarray(idx[k])].tolist()))
+              for k in range(K)]
+    assert max(counts) <= 4 and np.mean(counts) <= 3.2, counts
+
+
+@given(st.integers(2, 5), st.sampled_from([0.1, 1.0, 100.0]),
+       st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_dirichlet_partition_valid(K, alpha, seed):
+    key = jax.random.PRNGKey(seed)
+    labels = jax.random.randint(key, (400,), 0, 10)
+    idx = partition.dirichlet(jax.random.fold_in(key, 1), labels, K, alpha, 10)
+    flat = np.asarray(idx).ravel()
+    assert len(set(flat.tolist())) == len(flat)
+    assert idx.shape[0] == K and idx.shape[1] > 0
+
+
+def test_ratio_non_iid_ratios(rng):
+    labels = jnp.concatenate([jnp.zeros(500, jnp.int32),
+                              jnp.ones(500, jnp.int32)])
+    idx = partition.ratio_non_iid(rng, labels, 4, 0.9)
+    labels_np = np.asarray(labels)
+    for k in range(4):
+        frac_pos = labels_np[np.asarray(idx[k])].mean()
+        assert frac_pos > 0.85 or frac_pos < 0.15
+
+
+def test_gather_clients_shapes(rng):
+    x = jnp.arange(40.0).reshape(20, 2)
+    y = jnp.arange(20)
+    idx = partition.iid(rng, 20, 4)
+    xc, yc = partition.gather_clients(x, y, idx)
+    assert xc.shape == (4, 5, 2) and yc.shape == (4, 5)

@@ -1,0 +1,110 @@
+"""Integration tests of the federated engines (paper-scale substrate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import CommModel
+from repro.core.fd import aggregate_fd, distill_targets, per_label_logits
+from repro.core.fedavg import weighted_average
+from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
+from repro.data.pipeline import build_image_task
+from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
+
+K = 4
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_image_task(seed=0, K=K, n_private=640, n_open=320,
+                            n_test=320, distribution="non_iid")
+
+
+@pytest.fixture(scope="module")
+def small_init():
+    def init(k):
+        return init_mnist_cnn(k, image_hw=16, widths=(8, 16), fc=32)
+    return init
+
+
+def test_dsfl_engine_improves_accuracy(task, small_init, rng):
+    wg, sg = small_init(rng)
+    wk = jax.vmap(lambda k: small_init(k)[0])(jax.random.split(rng, K))
+    sk = jax.vmap(lambda k: small_init(k)[1])(jax.random.split(rng, K))
+    hp = DSFLConfig(rounds=4, local_epochs=2, distill_epochs=2, batch_size=40,
+                    open_batch=160, aggregation="era")
+    eng = DSFLEngine(apply_mnist_cnn, hp,
+                     make_eval_fn(apply_mnist_cnn, task.x_test, task.y_test))
+    eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients, task.open_x)
+    accs = [h["test_acc"] for h in eng.history]
+    assert accs[-1] > 0.3, accs            # well above 10% chance
+    assert accs[-1] > accs[0]
+
+
+def test_era_entropy_below_sa_entropy(task, small_init, rng):
+    wg, sg = small_init(rng)
+    wk = jax.vmap(lambda k: small_init(k)[0])(jax.random.split(rng, K))
+    sk = jax.vmap(lambda k: small_init(k)[1])(jax.random.split(rng, K))
+    hp = DSFLConfig(rounds=2, local_epochs=1, distill_epochs=1, batch_size=40,
+                    open_batch=160, aggregation="era")
+    eng = DSFLEngine(apply_mnist_cnn, hp,
+                     make_eval_fn(apply_mnist_cnn, task.x_test, task.y_test))
+    eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients, task.open_x)
+    for h in eng.history:
+        assert h["global_entropy"] <= h["sa_entropy"] + 1e-5
+
+
+# --------------------------------------------------------------- FedAvg ------
+def test_weighted_average_recovers_mean(rng):
+    stacked = {"w": jnp.arange(12.0).reshape(3, 4)}
+    avg = weighted_average(stacked, jnp.ones((3,)))
+    np.testing.assert_allclose(avg["w"], jnp.mean(stacked["w"], 0), atol=1e-6)
+    w = jnp.array([1.0, 0.0, 0.0])
+    avg = weighted_average(stacked, w)
+    np.testing.assert_allclose(avg["w"], stacked["w"][0], atol=1e-6)
+
+
+# ------------------------------------------------------------------- FD ------
+def test_fd_per_label_logits_shapes(task, small_init, rng):
+    w, s = small_init(rng)
+    t, present = per_label_logits(apply_mnist_cnn, w, s,
+                                  task.x_clients[0], task.y_clients[0], 10)
+    assert t.shape == (10, 10) and present.shape == (10,)
+    # strong non-IID: each client holds ~2 classes
+    assert int(present.sum()) <= 4
+
+
+def test_fd_aggregate_and_debias(rng):
+    K, C = 3, 4
+    tk = jax.nn.softmax(jax.random.normal(rng, (K, C, C)), -1)
+    present = jnp.ones((K, C), bool)
+    tg, n_own = aggregate_fd(tk, present)
+    np.testing.assert_allclose(n_own, 3.0)
+    tgt = distill_targets(tg, tk[0], n_own, jnp.arange(C))
+    # Eq. 6: (K*tg - tk)/(K-1) must average back to tg
+    recon = (tgt + tk[0][jnp.arange(C)] / 2) * 2 / 3
+    np.testing.assert_allclose(jnp.sum(tgt, -1), 1.0, atol=1e-4)
+
+
+# ------------------------------------------------------------- comm model ----
+def test_comm_model_reproduces_paper_tables():
+    # Table 1 (image tasks, K=100) and Table 2 (text tasks, K=10)
+    mnist = CommModel(100, 10, 583_242, 1000)
+    assert abs(mnist.fl_round() - 236.1e6) / 236.1e6 < 0.01
+    assert abs(mnist.fd_round() - 40.4e3) / 40.4e3 < 0.01
+    assert abs(mnist.dsfl_round() - 4.0e6) / 4.0e6 < 0.02
+    fmnist = CommModel(100, 10, 2_760_228, 1000)
+    assert abs(fmnist.fl_round() - 1.1e9) / 1.1e9 < 0.02
+    imdb = CommModel(10, 2, 646_338, 1000)
+    assert abs(imdb.fl_round() - 28.6e6) / 28.6e6 < 0.01
+    assert imdb.fd_round() == 176
+    assert imdb.dsfl_round() == 88_000
+    reuters = CommModel(10, 46, 5_194_670, 1000)
+    assert abs(reuters.fl_round() - 228.8e6) / 228.8e6 < 0.01
+    assert abs(reuters.fd_round() - 93e3) / 93e3 < 0.02
+    assert abs(reuters.dsfl_round() - 2.0e6) / 2.0e6 < 0.02
+
+
+def test_topk_exchange_is_cheaper():
+    cm = CommModel(10, 202_048, 10**9, 1000)   # LLM-scale vocab
+    assert cm.dsfl_topk_round(32) < cm.dsfl_round() / 100

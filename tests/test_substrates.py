@@ -1,0 +1,149 @@
+"""Optimizers, losses, checkpointing, data generators, smallnets, attacks."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core import attacks
+from repro.core.losses import (distill_xent, entropy, log_softmax,
+                               softmax_xent, topk_distill_xent,
+                               xent_int_labels)
+from repro.data import synthetic
+from repro.models.base import param_count
+from repro.models.smallnets import (apply_imdb_lstm, apply_reuters_dnn,
+                                    init_imdb_lstm, init_mnist_cnn,
+                                    init_fmnist_cnn, init_reuters_dnn)
+from repro.optim import adam, momentum, sgd
+
+
+# ---------------------------------------------------------------- losses -----
+def test_xent_int_equals_onehot(rng):
+    logits = jax.random.normal(rng, (8, 5))
+    labels = jax.random.randint(rng, (8,), 0, 5)
+    a = xent_int_labels(logits, labels)
+    b = softmax_xent(logits, jax.nn.one_hot(labels, 5))
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_distill_xent_self_is_entropy(rng):
+    logits = jax.random.normal(rng, (6, 7))
+    p = jax.nn.softmax(logits, -1)
+    # CE(p || p) = H(p)
+    np.testing.assert_allclose(distill_xent(logits, p),
+                               jnp.mean(entropy(p)), atol=1e-5)
+
+
+def test_topk_distill_full_k_equals_dense(rng):
+    logits = jax.random.normal(rng, (4, 6))
+    t = jax.nn.softmax(jax.random.normal(jax.random.fold_in(rng, 1), (4, 6)), -1)
+    v, i = jax.lax.top_k(t, 6)
+    dense = distill_xent(logits, t)
+    sparse = topk_distill_xent(logits, v, i)
+    np.testing.assert_allclose(dense, sparse, atol=1e-5)
+
+
+@given(st.integers(2, 32), st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=20,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_log_softmax_normalized(C, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, C)) * 5
+    ls = log_softmax(x)
+    np.testing.assert_allclose(jnp.sum(jnp.exp(ls), -1), 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------------- optimizers ----
+@pytest.mark.parametrize("make_opt", [lambda: sgd(0.1), lambda: momentum(0.05),
+                                      lambda: adam(0.1)],
+                         ids=["sgd", "momentum", "adam"])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for step in range(200):
+        g = jax.tree.map(lambda p: 2 * p, params)   # d/dx |x|^2
+        params, state = opt.update(g, params, state, step)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+# ------------------------------------------------------------- checkpoint ----
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"a": jax.random.normal(rng, (3, 4)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": [jnp.ones(2), jnp.zeros(3)]},
+            "e": jnp.bfloat16(1.5) * jnp.ones((2, 2), jnp.bfloat16)}
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+# ------------------------------------------------------------------- data ----
+def test_digits_learnable_structure(rng):
+    x, y = synthetic.make_digits(rng, 256)
+    assert x.shape == (256, 16, 16, 1) and y.shape == (256,)
+    # same-class pairs are closer than cross-class pairs on average
+    x0 = x[y == int(y[0])][:10].reshape(-1, 256)
+    x1 = x[y != int(y[0])][:10].reshape(-1, 256)
+    d_same = np.mean([np.linalg.norm(a - b) for a in x0[:5] for b in x0[5:]])
+    d_diff = np.mean([np.linalg.norm(a - b) for a in x0[:5] for b in x1[:5]])
+    assert d_same < d_diff
+
+
+def test_token_lm_domain_structure(rng):
+    toks, dom = synthetic.make_token_lm(rng, 32, 64, 128, n_domains=4)
+    assert toks.shape == (32, 64) and toks.max() < 128
+    # domain-specific vocabulary bias exists
+    t0 = np.asarray(toks[dom == 0]).ravel()
+    t3 = np.asarray(toks[dom == 3]).ravel()
+    if len(t0) and len(t3):
+        assert abs(t0.mean() - t3.mean()) > 1.0
+
+
+# ------------------------------------------------------------- smallnets -----
+def test_paper_param_counts(rng):
+    for init, paper, tol in [
+        (init_mnist_cnn, 583_242, 0.002),
+        (init_fmnist_cnn, 2_760_228, 0.001),
+        (init_imdb_lstm, 646_338, 0.004),
+        (init_reuters_dnn, 5_194_670, 0.0),
+    ]:
+        p, s = init(rng)
+        n = param_count(p) + param_count(s)
+        assert abs(n - paper) <= paper * tol + 1, (init.__name__, n, paper)
+
+
+def test_lstm_and_dnn_forward(rng):
+    p, s = init_imdb_lstm(rng, vocab=100, emb=8, hidden=8)
+    toks = jax.random.randint(rng, (3, 12), 0, 100)
+    logits, _ = apply_imdb_lstm(p, s, toks, True)
+    assert logits.shape == (3, 2)
+    p, s = init_reuters_dnn(rng, vocab=50, widths=(16, 8))
+    x = jax.random.normal(rng, (3, 50))
+    logits, ns = apply_reuters_dnn(p, s, x, True)
+    assert logits.shape == (3, 46)
+    assert not np.allclose(ns["bn1"]["mean"], s["bn1"]["mean"])
+
+
+# ---------------------------------------------------------------- attacks ----
+def test_noisy_labels_rate(rng):
+    labels = jax.random.randint(rng, (4, 200), 0, 10)
+    noised = attacks.apply_noisy_labels(rng, labels, 10, C=3)
+    frac = float(jnp.mean((noised != labels).astype(jnp.float32)))
+    assert 0.1 < frac < 0.45        # ~3/10 of classes remapped (self-map possible)
+
+
+def test_poison_fl_upload_replaces_average(rng):
+    K = 5
+    wg = {"w": jnp.ones((3,))}
+    wx = {"w": jnp.full((3,), 7.0)}
+    wm = attacks.poison_fl_upload(wx, wg, K)
+    # average of (K-1) copies of wg and the malicious upload == wx
+    avg = ((K - 1) * wg["w"] + wm["w"]) / K
+    np.testing.assert_allclose(avg, wx["w"], atol=1e-5)

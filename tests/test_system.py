@@ -1,0 +1,69 @@
+"""End-to-end behaviour: the paper's central claims at micro scale, plus the
+serving path.  (Full-scale claim validation lives in benchmarks/.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
+from repro.data.pipeline import build_image_task
+from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
+
+K = 4
+
+
+def _init(k):
+    return init_mnist_cnn(k, image_hw=16, widths=(8, 16), fc=32)
+
+
+def _run(hp, task, rng, corrupt=None):
+    wg, sg = _init(rng)
+    wk = jax.vmap(lambda k: _init(k)[0])(jax.random.split(rng, K))
+    sk = jax.vmap(lambda k: _init(k)[1])(jax.random.split(rng, K))
+    eng = DSFLEngine(apply_mnist_cnn, hp,
+                     make_eval_fn(apply_mnist_cnn, task.x_test, task.y_test),
+                     corrupt=corrupt)
+    eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients, task.open_x)
+    return eng.history
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_image_task(seed=1, K=K, n_private=640, n_open=320,
+                            n_test=320, distribution="non_iid")
+
+
+def test_era_converges_at_least_as_fast_as_sa(task, rng):
+    """Paper claim: ERA accelerates convergence under non-IID (Fig. 5/6)."""
+    hp_era = DSFLConfig(rounds=4, local_epochs=2, distill_epochs=2,
+                        batch_size=40, open_batch=160, aggregation="era")
+    hp_sa = DSFLConfig(rounds=4, local_epochs=2, distill_epochs=2,
+                       batch_size=40, open_batch=160, aggregation="sa")
+    h_era = _run(hp_era, task, rng)
+    h_sa = _run(hp_sa, task, rng)
+    # cumulative accuracy (area under the curve) as a convergence-speed proxy
+    auc_era = sum(h["test_acc"] for h in h_era)
+    auc_sa = sum(h["test_acc"] for h in h_sa)
+    assert auc_era >= auc_sa * 0.9      # ERA >= SA (within noise at 4 rounds)
+    assert h_era[-1]["global_entropy"] < h_sa[-1]["global_entropy"]
+
+
+def test_serve_greedy_is_deterministic(rng):
+    from repro.launch.serve import serve
+    from repro.configs import get_config
+    from repro.models.api import model_init
+    cfg = get_config("qwen1.5-4b").smoke()
+    params = model_init(cfg, rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 8), 0, cfg.vocab,
+                                          jnp.int32)}
+    t1, _ = serve(cfg, params, batch, gen=4, seq_budget=16)
+    t2, _ = serve(cfg, params, batch, gen=4, seq_budget=16)
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_quickstart_example_runs():
+    import subprocess, sys, os
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "examples/quickstart.py", "--fast"],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
