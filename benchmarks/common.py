@@ -1,26 +1,30 @@
 """Shared experiment runner for the paper-table benchmarks.
 
-Runs the four methods of the paper on the synthetic federated image task:
+Runs the four methods of the paper on the synthetic federated image task,
+all through the single algorithm-agnostic `FedEngine`:
   dsfl_era / dsfl_sa  - Algorithm 1 with ERA / SA aggregation
   fl                  - Benchmark 1 (FedAvg)
   fd                  - Benchmark 2 (federated distillation)
   single              - one client trains alone (lower bound)
-Histories carry per-round test accuracy + cumulative communication bytes.
+Histories carry per-round test accuracy + cumulative communication bytes
+*measured* on the actually-encoded wire payload (`repro.core.wire`), not
+just computed analytically — `CommModel` stays as the cross-check.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import CommModel
-from repro.core.fd import make_fd_round
-from repro.core.fedavg import make_fedavg_round
+from repro.core.algorithms import (DSFLAlgorithm, FDAlgorithm, FDConfig,
+                                   FedAvgAlgorithm, FedAvgConfig)
 from repro.core.client import LocalSpec, local_update
-from repro.core.losses import accuracy
-from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
+from repro.core.comm import CommModel
+from repro.core.engine import FedEngine, make_eval_fn
+from repro.core.protocol import DSFLConfig
 from repro.data.pipeline import FederatedImageTask, build_image_task
 from repro.models.base import param_count
 from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
@@ -60,11 +64,8 @@ def comm_model(task: FederatedImageTask, ec: ExpConfig) -> CommModel:
                      min(ec.open_batch, task.open_x.shape[0]))
 
 
-def run_dsfl(task, ec: ExpConfig, aggregation="era", corrupt=None,
-             temperature=None):
-    key = jax.random.PRNGKey(ec.seed)
-    wg, sg = cnn_init(key)
-    wk, sk = make_clients(key, ec.K)
+def dsfl_engine(task, ec: ExpConfig, aggregation="era", corrupt=None,
+                temperature=None):
     hp = DSFLConfig(rounds=ec.rounds, local_epochs=ec.local_epochs,
                     distill_epochs=ec.distill_epochs, batch_size=ec.batch_size,
                     open_batch=min(ec.open_batch, task.open_x.shape[0]),
@@ -72,61 +73,66 @@ def run_dsfl(task, ec: ExpConfig, aggregation="era", corrupt=None,
                     aggregation=aggregation,
                     temperature=ec.temperature if temperature is None
                     else temperature, seed=ec.seed)
-    eng = DSFLEngine(APPLY, hp, make_eval_fn(APPLY, task.x_test, task.y_test),
-                     corrupt=corrupt)
-    eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients, task.open_x)
-    cm = comm_model(task, ec)
-    per_round = cm.dsfl_round()
+    algo = DSFLAlgorithm(APPLY, hp, corrupt=corrupt)
+    return FedEngine(algo, make_eval_fn(APPLY, task.x_test, task.y_test))
+
+
+def run_dsfl(task, ec: ExpConfig, aggregation="era", corrupt=None,
+             temperature=None, return_state=False):
+    key = jax.random.PRNGKey(ec.seed)
+    wg, sg = cnn_init(key)
+    wk, sk = make_clients(key, ec.K)
+    eng = dsfl_engine(task, ec, aggregation, corrupt, temperature)
+    state = eng.algo.init_from(wk, sk, wg, sg)
+    state = eng.run(state, task)
+    per_round = eng.measured_round_bytes(state, task)
+    one_off = comm_model(task, ec).open_set_distribution(
+        task.open_x.shape[0], task.open_x[0].size)
     for h in eng.history:
-        h["cum_bytes"] = h["round"] * per_round + cm.open_set_distribution(
-            task.open_x.shape[0], task.open_x[0].size)
+        h["cum_bytes"] = h["round"] * per_round + one_off
+    if return_state:
+        return eng.history, state
     return eng.history
 
 
 def run_fl(task, ec: ExpConfig, poison_fn=None):
     key = jax.random.PRNGKey(ec.seed)
     w0, s0 = cnn_init(key)
-    opt = opt_lib.make("sgd", ec.lr)
-    spec = LocalSpec(APPLY, opt, ec.local_epochs, ec.batch_size)
-    round_fn = jax.jit(make_fedavg_round(spec))
-    weights = jnp.ones((ec.K,))
-    eval_fn = make_eval_fn(APPLY, task.x_test, task.y_test)
-    cm = comm_model(task, ec)
-    history = []
-    rng = key
-    for r in range(ec.rounds):
-        rng, rk = jax.random.split(rng)
-        w0, s0 = round_fn(w0, s0, task.x_clients, task.y_clients, weights, rk)
-        if poison_fn is not None:
-            w0, s0 = poison_fn(r, w0, s0)
-        history.append({"round": r + 1, **eval_fn(w0, s0),
-                        "cum_bytes": (r + 1) * cm.fl_round()})
-    return history, (w0, s0)
+    algo = FedAvgAlgorithm(APPLY, FedAvgConfig(
+        rounds=ec.rounds, local_epochs=ec.local_epochs,
+        batch_size=ec.batch_size, lr=ec.lr, seed=ec.seed))
+
+    def on_round(r, state):
+        if poison_fn is None:
+            return state
+        w, s = poison_fn(r, state.server.params, state.server.model_state)
+        return dataclasses.replace(state, server=dataclasses.replace(
+            state.server, params=w, model_state=s))
+
+    eng = FedEngine(algo, make_eval_fn(APPLY, task.x_test, task.y_test),
+                    on_round=on_round)
+    state = algo.init_from(w0, s0)
+    state = eng.run(state, task, weights=jnp.ones((ec.K,)))
+    per_round = eng.measured_round_bytes(state, task)
+    for h in eng.history:
+        h["cum_bytes"] = h["round"] * per_round
+    return eng.history, (state.server.params, state.server.model_state)
 
 
 def run_fd(task, ec: ExpConfig):
     key = jax.random.PRNGKey(ec.seed)
     wk, sk = make_clients(key, ec.K)
-    opt = opt_lib.make("sgd", ec.lr)
-    spec = LocalSpec(APPLY, opt, ec.local_epochs, ec.batch_size)
-    round_fn = jax.jit(make_fd_round(spec, task.n_classes, ec.gamma))
-    ok = jax.vmap(opt.init)(wk)
-    eval_fn = make_eval_fn(APPLY, task.x_test, task.y_test)
-    cm = comm_model(task, ec)
-    history = []
-    rng = key
-    tg_last = None
-    for r in range(ec.rounds):
-        rng, rk = jax.random.split(rng)
-        wk, sk, ok, loss, tg = round_fn(wk, sk, ok, task.x_clients,
-                                        task.y_clients, rk)
-        tg_last = tg
-        # evaluate the mean client model (FD has no server model)
-        w_avg = jax.tree.map(lambda x: jnp.mean(x, 0), wk)
-        s_avg = jax.tree.map(lambda x: jnp.mean(x, 0), sk)
-        history.append({"round": r + 1, **eval_fn(w_avg, s_avg),
-                        "cum_bytes": (r + 1) * cm.fd_round()})
-    return history, tg_last
+    algo = FDAlgorithm(APPLY, FDConfig(
+        rounds=ec.rounds, local_epochs=ec.local_epochs,
+        batch_size=ec.batch_size, lr=ec.lr, gamma=ec.gamma,
+        n_classes=task.n_classes, seed=ec.seed))
+    eng = FedEngine(algo, make_eval_fn(APPLY, task.x_test, task.y_test))
+    state = algo.init_from(wk, sk)
+    state = eng.run(state, task)
+    per_round = eng.measured_round_bytes(state, task)
+    for h in eng.history:
+        h["cum_bytes"] = h["round"] * per_round
+    return eng.history, eng.last_metrics["global_logit"]
 
 
 def run_single(task, ec: ExpConfig):

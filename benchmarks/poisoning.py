@@ -67,25 +67,15 @@ def run(fast: bool = True):
         mal = predict_probs(APPLY, w_x, s_x, xo)
         return probs.at[0].set(mal)
 
+    state_era = None
     for agg in ("sa", "era"):
-        h = run_dsfl(task, ec, agg, corrupt=corrupt)
-        # evaluate backdoor on server model: rerun engine to get w_g? use
-        # history accuracy for main; backdoor measured via a fresh engine run
+        h, st = run_dsfl(task, ec, agg, corrupt=corrupt, return_state=True)
+        if agg == "era":
+            state_era = st
         rows.append((f"table4/dsfl_{agg}_main", 0.0,
                      f"main={max(x['test_acc'] for x in h):.3f}"))
-    # backdoor accuracy of DS-FL server model
-    from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
-    key = jax.random.PRNGKey(ec.seed)
-    wg, sg = cnn_init(key)
-    wk = jax.vmap(lambda k: cnn_init(k)[0])(jax.random.split(key, ec.K))
-    sk = jax.vmap(lambda k: cnn_init(k)[1])(jax.random.split(key, ec.K))
-    hp = DSFLConfig(rounds=ec.rounds, local_epochs=ec.local_epochs,
-                    distill_epochs=ec.distill_epochs, batch_size=ec.batch_size,
-                    open_batch=200, aggregation="era", seed=ec.seed)
-    eng = DSFLEngine(APPLY, hp, make_eval_fn(APPLY, task.x_test, task.y_test),
-                     corrupt=corrupt)
-    _, _, wg, sg = eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients,
-                           task.open_x)
+    # backdoor accuracy of the DS-FL server model from the ERA run above
+    wg, sg = state_era.server.params, state_era.server.model_state
     bd = float(accuracy(APPLY(wg, sg, bd_test_x, False)[0], bd_test_y))
     main = float(accuracy(APPLY(wg, sg, task.x_test, False)[0], task.y_test))
     rows.append(("table4/dsfl_era_server", 0.0,

@@ -14,6 +14,7 @@ import traceback
 
 BENCHES = [
     ("comm", "benchmarks.comm_cost"),            # Tables 1-2
+    ("wire", "benchmarks.wire_bench"),           # measured codec bytes
     ("fig2", "benchmarks.fd_logit"),             # FD logit collapse
     ("fig3", "benchmarks.entropy_bench"),        # entropy traces (Figs 3/9)
     ("fig5", "benchmarks.accuracy_vs_comm"),     # acc vs comm + Table 3

@@ -1,0 +1,52 @@
+"""Wire-codec benchmark: encode/decode throughput of each `repro.core.wire`
+codec on a paper-scale DS-FL upload, plus measured-vs-analytic byte counts
+for all three algorithms through the unified `FedEngine`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wire
+from repro.core.comm import fmt_bytes
+from .common import (ExpConfig, comm_model, dsfl_engine, make_clients,
+                     cnn_init, timed)
+from repro.data.pipeline import build_image_task
+
+
+def run(fast: bool = True):
+    ec = ExpConfig(K=4 if fast else 10, rounds=1, open_batch=200 if fast
+                   else 1000)
+    task = build_image_task(seed=0, K=ec.K, n_private=400,
+                            n_open=ec.open_batch, n_test=100,
+                            distribution="non_iid")
+    cm = comm_model(task, ec)
+    n, C = ec.open_batch, task.n_classes
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (n, C)), -1)
+
+    rows = []
+    codecs = [("dense_f32", wire.DenseF32Codec(), cm.dsfl_round()),
+              ("fp16", wire.FP16Codec(), cm.dsfl_fp16_round()),
+              ("topk", wire.TopKCodec(k=5, n_classes=C),
+               cm.dsfl_topk_round(5))]
+    for name, codec, analytic in codecs:
+        enc = jax.jit(codec.encode)
+        dec = jax.jit(codec.decode)
+        us_e, payload = timed(enc, probs)
+        us_d, _ = timed(dec, payload)
+        measured = codec.payload_bytes(payload) * (ec.K + 1)
+        ok = "OK" if measured == analytic else "MISMATCH"
+        rows.append((f"wire/{name}_encode", us_e,
+                     f"round={fmt_bytes(measured)} analytic="
+                     f"{fmt_bytes(analytic)} {ok}"))
+        rows.append((f"wire/{name}_decode", us_d, ""))
+
+    # measured per-round bytes through the engine (the Table 1/2 cross-check)
+    eng = dsfl_engine(task, ec)
+    wk, sk = make_clients(jax.random.PRNGKey(0), ec.K)
+    wg, sg = cnn_init(jax.random.PRNGKey(0))
+    state = eng.algo.init_from(wk, sk, wg, sg)
+    mb = eng.measured_round_bytes(state, task)
+    rows.append(("wire/dsfl_engine_round_bytes", 0.0,
+                 f"{fmt_bytes(mb)} (analytic {fmt_bytes(cm.dsfl_round())})"))
+    return rows

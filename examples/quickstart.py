@@ -1,5 +1,12 @@
-"""DS-FL quickstart: 10 clients with non-IID private digit data collaborate
-by exchanging logits on a shared unlabeled open set (never parameters).
+"""DS-FL quickstart on the unified `FedAlgorithm` API: 10 clients with
+non-IID private digit data collaborate by exchanging logits on a shared
+unlabeled open set (never parameters).
+
+The same three lines run any algorithm in the repo:
+
+    algo  = DSFLAlgorithm(apply_fn, hp)          # or FDAlgorithm / FedAvg...
+    eng   = FedEngine(algo, make_eval_fn(...))
+    state = eng.run(eng.init(model_init, task), task)
 
   PYTHONPATH=src python examples/quickstart.py          # ~2 min on CPU
   PYTHONPATH=src python examples/quickstart.py --fast   # smoke (~40 s)
@@ -9,8 +16,11 @@ import sys
 
 import jax
 
+from repro.core.algorithms import DSFLAlgorithm
 from repro.core.comm import CommModel, fmt_bytes
-from repro.core.protocol import DSFLConfig, DSFLEngine, make_eval_fn
+from repro.core.engine import FedEngine, make_eval_fn
+from repro.core.protocol import DSFLConfig
+from repro.core.wire import TopKCodec
 from repro.data.pipeline import build_image_task
 from repro.models.base import param_count
 from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
@@ -21,7 +31,8 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=10)
-    ap.add_argument("--aggregation", default="era", choices=["era", "sa"])
+    ap.add_argument("--aggregation", default="era",
+                    choices=["era", "sa", "weighted_era"])
     args = ap.parse_args(argv)
 
     K = 4 if args.fast else args.clients
@@ -34,25 +45,28 @@ def main(argv=None):
     def init(k):
         return init_mnist_cnn(k, image_hw=16, widths=(8, 16), fc=32)
 
-    key = jax.random.PRNGKey(0)
-    wg, sg = init(key)
-    wk = jax.vmap(lambda k: init(k)[0])(jax.random.split(key, K))
-    sk = jax.vmap(lambda k: init(k)[1])(jax.random.split(key, K))
-
     hp = DSFLConfig(rounds=rounds, local_epochs=2, distill_epochs=2,
                     batch_size=40, open_batch=min(320, task.open_x.shape[0]),
                     aggregation=args.aggregation)
-    eng = DSFLEngine(apply_mnist_cnn, hp,
-                     make_eval_fn(apply_mnist_cnn, task.x_test, task.y_test))
-    eng.run(wk, sk, wg, sg, task.x_clients, task.y_clients, task.open_x)
+    algo = DSFLAlgorithm(apply_mnist_cnn, hp)
+    eng = FedEngine(algo, make_eval_fn(apply_mnist_cnn, task.x_test,
+                                       task.y_test))
+    state = eng.init(init, task)
+    state = eng.run(state, task)
 
+    wg, sg = algo.eval_params(state)
     n_params = param_count(wg) + param_count(sg)
     cm = CommModel(K, task.n_classes, n_params, hp.open_batch)
+    dsfl_bytes = eng.measured_round_bytes(state, task)   # measured on the wire
+    topk_bytes = FedEngine(algo, codec=TopKCodec(k=3, n_classes=task.n_classes)
+                           ).measured_round_bytes(state, task)
     print(f"\nmodel: {n_params:,} params | {K} clients | "
           f"aggregation={hp.aggregation}")
     print(f"per-round comm  FL(FedAvg): {fmt_bytes(cm.fl_round())}   "
-          f"DS-FL: {fmt_bytes(cm.dsfl_round())}  "
-          f"({cm.fl_round() / cm.dsfl_round():.0f}x reduction)")
+          f"DS-FL: {fmt_bytes(dsfl_bytes)}  "
+          f"({cm.fl_round() / dsfl_bytes:.0f}x reduction; "
+          f"top-3 codec: {fmt_bytes(topk_bytes)})")
+    assert dsfl_bytes == cm.dsfl_round(), "measured != analytic comm"
     for h in eng.history:
         print(f"round {h['round']:3d}  server acc {h['test_acc']:.3f}  "
               f"teacher entropy {h['global_entropy']:.3f}")

@@ -1,5 +1,7 @@
 # The paper's primary contribution: the DS-FL protocol (Algorithm 1), its
 # ERA aggregation operator, the FedAvg/FD benchmarks, attack models and
-# communication accounting.
-from . import aggregation, attacks, client, comm, fd, fedavg, llm_dsfl, \
-    losses, protocol  # noqa
+# communication accounting.  `algorithms` + `engine` + `wire` form the
+# unified FedAlgorithm API; `protocol.DSFLEngine` et al. are kept as
+# deprecated reference implementations.
+from . import aggregation, algorithms, attacks, client, comm, engine, fd, \
+    fedavg, llm_dsfl, losses, protocol, wire  # noqa

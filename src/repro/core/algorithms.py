@@ -1,0 +1,358 @@
+"""Unified `FedAlgorithm` API (the substrate every scenario plugs into).
+
+Every federated protocol in the repo — DS-FL (paper Algorithm 1), FD
+(Jeong et al. 2018) and FedAvg (McMahan et al. 2017) — exposes the same
+two-method surface:
+
+    state            = algo.init(rng, model_init, data)   # -> RoundState
+    state, metrics   = algo.round(state, ctx, rng)        # one federated round
+
+`RoundState` / `ClientState` / `ServerState` are frozen dataclasses
+registered as JAX pytrees, so one `jax.jit(algo.round)` covers any
+algorithm (see `repro.core.engine.FedEngine`) and replaces the positional
+``wk, sk, ouk, odk, wg, sg, odg`` soup of the original per-protocol round
+builders.  `BatchCtx` carries the per-round data (private stacks, open
+batch indices, FedAvg weights) as a single pytree argument.
+
+Algorithms additionally expose:
+
+  * ``uses_open``                — whether the engine must sample o_r;
+  * ``upload_payload(state, ctx)`` — the per-client wire payload of one
+    round (per-sample logits for DS-FL, per-class logits for FD, the full
+    parameter vector for FedAvg), which `repro.core.wire` codecs encode and
+    measure against `comm.CommModel`'s analytic byte counts;
+  * ``eval_params(state)``       — the (params, model_state) pair a test-set
+    evaluation should score (server model for DS-FL/FedAvg, mean client
+    model for FD, which has no server model).
+
+RNG discipline mirrors the (fixed) reference `protocol.make_dsfl_round`
+bit-for-bit: the DS-FL round splits its key into (update, client-distill,
+corrupt, server-distill) so the golden-parity test in
+``tests/test_engine.py`` can compare the two engines exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import optimizers as opt_lib
+from . import fd as fd_lib
+from .aggregation import aggregate
+from .client import LocalSpec, local_distill, local_update, predict_probs
+from .fedavg import weighted_average
+from .losses import entropy
+from .protocol import DSFLConfig  # noqa: F401  (re-exported as part of the API)
+
+EMPTY = ()   # absent pytree slot (contributes no leaves)
+
+
+def _pytree_dataclass(cls):
+    fields = [f.name for f in dataclasses.fields(cls)]
+    return jax.tree_util.register_dataclass(cls, data_fields=fields,
+                                            meta_fields=[])
+
+
+# --------------------------------------------------------------- states ------
+@_pytree_dataclass
+@dataclass(frozen=True)
+class ClientState:
+    """Per-client persistent state, stacked over the leading (K,) axis."""
+    params: Any = EMPTY         # model parameters, leaves (K, ...)
+    model_state: Any = EMPTY    # e.g. BatchNorm running stats
+    opt_update: Any = EMPTY     # optimizer state of the "1. Update" loop
+    opt_distill: Any = EMPTY    # optimizer state of the "6. Distillation" loop
+
+
+@_pytree_dataclass
+@dataclass(frozen=True)
+class ServerState:
+    """Global-model state held by the server (empty for FD)."""
+    params: Any = EMPTY
+    model_state: Any = EMPTY
+    opt_distill: Any = EMPTY
+
+
+@_pytree_dataclass
+@dataclass(frozen=True)
+class RoundState:
+    clients: ClientState = ClientState()
+    server: ServerState = ServerState()
+
+
+@_pytree_dataclass
+@dataclass(frozen=True)
+class BatchCtx:
+    """Per-round data context (a single pytree argument to ``round``)."""
+    x: Any = EMPTY          # (K, I_k, ...) private inputs
+    y: Any = EMPTY          # (K, I_k) private labels
+    open_x: Any = EMPTY     # (I_o, ...) the full shared open set
+    o_idx: Any = EMPTY      # (n,) this round's open-batch indices o_r
+    weights: Any = EMPTY    # (K,) client dataset sizes (FedAvg Eq. 3)
+
+
+# ------------------------------------------------------------- protocol ------
+@runtime_checkable
+class FedAlgorithm(Protocol):
+    """The algorithm surface `FedEngine` drives.  ``hp`` must provide
+    ``rounds`` and ``seed``; ``uses_open`` algorithms also ``open_batch``."""
+    name: str
+    uses_open: bool
+
+    def init(self, rng, model_init: Callable, data) -> RoundState: ...
+
+    def round(self, state: RoundState, ctx: BatchCtx,
+              rng) -> tuple[RoundState, dict]: ...
+
+    def upload_payload(self, state: RoundState, ctx: BatchCtx): ...
+
+    def eval_params(self, state: RoundState): ...
+
+
+def _stack_init(model_init: Callable, key, K: int):
+    return jax.vmap(model_init)(jax.random.split(key, K))
+
+
+def _first_client(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+# ---------------------------------------------------------------- DS-FL ------
+@dataclass(frozen=True)
+class DSFLAlgorithm:
+    """Paper Algorithm 1 on the unified API (SA / ERA / weighted-ERA).
+
+    ``corrupt(probs (K, n, C), xo, rng) -> probs`` optionally injects
+    malicious local logits between "2. Prediction" and "4. Aggregation".
+    """
+    apply_fn: Callable
+    hp: DSFLConfig
+    corrupt: Optional[Callable] = None
+    agg_weights: Optional[jax.Array] = None   # for aggregation="weighted_era"
+
+    name = "dsfl"
+    uses_open = True
+
+    def _specs(self):
+        hp = self.hp
+        opt_u = opt_lib.make(hp.optimizer, hp.lr)
+        opt_d = opt_lib.make(hp.optimizer, hp.lr_distill)
+        spec_u = LocalSpec(self.apply_fn, opt_u, hp.local_epochs, hp.batch_size)
+        spec_d = LocalSpec(self.apply_fn, opt_d, hp.distill_epochs,
+                           min(hp.batch_size, hp.open_batch))
+        return spec_u, spec_d
+
+    def init(self, rng, model_init: Callable, data) -> RoundState:
+        K = data.x_clients.shape[0]
+        wg, sg = model_init(rng)
+        wk, sk = _stack_init(model_init, rng, K)
+        return self.init_from(wk, sk, wg, sg)
+
+    def init_from(self, wk, sk, wg, sg) -> RoundState:
+        """Build a RoundState around externally-initialized model params
+        (the seed `DSFLEngine.init_states` contract)."""
+        spec_u, spec_d = self._specs()
+        return RoundState(
+            clients=ClientState(params=wk, model_state=sk,
+                                opt_update=jax.vmap(spec_u.opt.init)(wk),
+                                opt_distill=jax.vmap(spec_d.opt.init)(wk)),
+            server=ServerState(params=wg, model_state=sg,
+                               opt_distill=spec_d.opt.init(wg)))
+
+    def round(self, state: RoundState, ctx: BatchCtx, rng):
+        hp = self.hp
+        spec_u, spec_d = self._specs()
+        wk, sk = state.clients.params, state.clients.model_state
+        ouk, odk = state.clients.opt_update, state.clients.opt_distill
+        wg, sg = state.server.params, state.server.model_state
+        odg = state.server.opt_distill
+        K = ctx.x.shape[0]
+        r1, r2, r3, r4 = jax.random.split(rng, 4)
+        xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
+
+        # 1. Update
+        wk, sk, ouk, up_loss = jax.vmap(
+            lambda w, s, o, xk, yk, rk: local_update(spec_u, w, s, o, xk, yk, rk)
+        )(wk, sk, ouk, ctx.x, ctx.y, jax.random.split(r1, K))
+
+        # 2. Prediction (local logits on o_r)
+        probs = jax.vmap(lambda w, s: predict_probs(self.apply_fn, w, s, xo)
+                         )(wk, sk)
+        if self.corrupt is not None:
+            probs = self.corrupt(probs, xo, r3)
+
+        # 3-5. Upload / Aggregation / Broadcast
+        agg_w = self.agg_weights
+        if agg_w is None and hp.aggregation == "weighted_era":
+            agg_w = jnp.ones((K,), jnp.float32)     # uniform reliability
+        global_logit = aggregate(probs, hp.aggregation, hp.temperature,
+                                 weights=agg_w)
+        sa_entropy = jnp.mean(entropy(jnp.mean(probs, axis=0)))
+        g_entropy = jnp.mean(entropy(global_logit))
+
+        # 6. Distillation (clients, Eq. 10)
+        wk, sk, odk, d_loss = jax.vmap(
+            lambda w, s, o, rk: local_distill(spec_d, w, s, o, xo,
+                                              global_logit, rk)
+        )(wk, sk, odk, jax.random.split(r2, K))
+
+        # 6'. server global model (Eq. 11), with its own key r4
+        wg, sg, odg, gd_loss = local_distill(spec_d, wg, sg, odg, xo,
+                                             global_logit, r4)
+
+        metrics = {"update_loss": jnp.mean(up_loss),
+                   "distill_loss": jnp.mean(d_loss),
+                   "server_distill_loss": gd_loss,
+                   "global_entropy": g_entropy,
+                   "sa_entropy": sa_entropy}
+        new = RoundState(
+            clients=ClientState(wk, sk, ouk, odk),
+            server=ServerState(wg, sg, odg))
+        return new, metrics
+
+    def upload_payload(self, state: RoundState, ctx: BatchCtx):
+        """One client's upload: per-sample probability vectors on o_r."""
+        xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
+        return predict_probs(self.apply_fn, _first_client(state.clients.params),
+                             _first_client(state.clients.model_state), xo)
+
+    def eval_params(self, state: RoundState):
+        return state.server.params, state.server.model_state
+
+
+# ------------------------------------------------------------------- FD ------
+@dataclass(frozen=True)
+class FDConfig:
+    rounds: int = 30
+    local_epochs: int = 5
+    batch_size: int = 100
+    lr: float = 0.1
+    optimizer: str = "sgd"
+    gamma: float = 1.0          # Eq. 7 distill regularizer weight
+    n_classes: int = 10
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class FDAlgorithm:
+    """Federated Distillation benchmark (paper §2.2) on the unified API."""
+    apply_fn: Callable
+    hp: FDConfig
+
+    name = "fd"
+    uses_open = False
+
+    def _spec(self):
+        hp = self.hp
+        return LocalSpec(self.apply_fn, opt_lib.make(hp.optimizer, hp.lr),
+                         hp.local_epochs, hp.batch_size)
+
+    def init(self, rng, model_init: Callable, data) -> RoundState:
+        K = data.x_clients.shape[0]
+        wk, sk = _stack_init(model_init, rng, K)
+        return self.init_from(wk, sk)
+
+    def init_from(self, wk, sk) -> RoundState:
+        spec = self._spec()
+        return RoundState(clients=ClientState(
+            params=wk, model_state=sk,
+            opt_update=jax.vmap(spec.opt.init)(wk)))
+
+    def round(self, state: RoundState, ctx: BatchCtx, rng):
+        hp = self.hp
+        spec = self._spec()
+        wk, sk = state.clients.params, state.clients.model_state
+        ok = state.clients.opt_update
+        K = ctx.x.shape[0]
+        tk, present = jax.vmap(
+            lambda w, s, xk, yk: fd_lib.per_label_logits(
+                self.apply_fn, w, s, xk, yk, hp.n_classes))(wk, sk, ctx.x, ctx.y)
+        tg, n_own = fd_lib.aggregate_fd(tk, present)
+        rngs = jax.random.split(rng, K)
+
+        def per_client(w, s, o, xk, yk, tkk, rk):
+            tgt = fd_lib.distill_targets(tg, tkk, n_own, yk)
+            return local_update(spec, w, s, o, xk, yk, rk,
+                                distill_extra=tgt, gamma=hp.gamma)
+
+        wk, sk, ok, losses = jax.vmap(per_client)(wk, sk, ok, ctx.x, ctx.y,
+                                                  tk, rngs)
+        metrics = {"update_loss": jnp.mean(losses),
+                   "global_logit": tg}        # (C, C), for Fig. 2 analysis
+        return RoundState(clients=ClientState(wk, sk, ok)), metrics
+
+    def upload_payload(self, state: RoundState, ctx: BatchCtx):
+        """One client's upload: the per-class average logit table (C, C)."""
+        t, _ = fd_lib.per_label_logits(
+            self.apply_fn, _first_client(state.clients.params),
+            _first_client(state.clients.model_state),
+            ctx.x[0], ctx.y[0], self.hp.n_classes)
+        return t
+
+    def eval_params(self, state: RoundState):
+        # FD has no server model: score the mean client model
+        mean = lambda t: jax.tree.map(lambda a: jnp.mean(a, axis=0), t)
+        return mean(state.clients.params), mean(state.clients.model_state)
+
+
+# --------------------------------------------------------------- FedAvg ------
+@dataclass(frozen=True)
+class FedAvgConfig:
+    rounds: int = 30
+    local_epochs: int = 5
+    batch_size: int = 100
+    lr: float = 0.1
+    optimizer: str = "sgd"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class FedAvgAlgorithm:
+    """FedAvg benchmark (paper §2.1) on the unified API.  Client state is
+    ephemeral (re-broadcast each round); only the server model persists."""
+    apply_fn: Callable
+    hp: FedAvgConfig
+
+    name = "fedavg"
+    uses_open = False
+
+    def _spec(self):
+        hp = self.hp
+        return LocalSpec(self.apply_fn, opt_lib.make(hp.optimizer, hp.lr),
+                         hp.local_epochs, hp.batch_size)
+
+    def init(self, rng, model_init: Callable, data) -> RoundState:
+        w0, s0 = model_init(rng)
+        return self.init_from(w0, s0)
+
+    def init_from(self, w0, s0) -> RoundState:
+        return RoundState(server=ServerState(params=w0, model_state=s0))
+
+    def round(self, state: RoundState, ctx: BatchCtx, rng):
+        spec = self._spec()
+        w0, s0 = state.server.params, state.server.model_state
+        K = ctx.x.shape[0]
+        rngs = jax.random.split(rng, K)
+
+        def per_client(xk, yk, rk):
+            opt_state = spec.opt.init(w0)
+            return local_update(spec, w0, s0, opt_state, xk, yk, rk)
+
+        wk, sk, _, losses = jax.vmap(per_client)(ctx.x, ctx.y, rngs)
+        weights = (jnp.ones((K,), jnp.float32)
+                   if isinstance(ctx.weights, tuple) else ctx.weights)
+        new_w0 = weighted_average(wk, weights)
+        new_s0 = weighted_average(sk, weights)
+        metrics = {"update_loss": jnp.mean(losses)}
+        return RoundState(server=ServerState(new_w0, new_s0)), metrics
+
+    def upload_payload(self, state: RoundState, ctx: BatchCtx):
+        """One client's upload: the full parameter vector (+ model state)."""
+        return {"params": state.server.params,
+                "model_state": state.server.model_state}
+
+    def eval_params(self, state: RoundState):
+        return state.server.params, state.server.model_state

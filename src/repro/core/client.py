@@ -34,7 +34,8 @@ def _epoch_perm(key, n_items: int, batch_size: int) -> jax.Array:
 def local_update(spec: LocalSpec, params, state, opt_state, x, y, rng,
                  distill_extra=None, gamma: float = 0.0):
     """E epochs of minibatch supervised training on one client's private data.
-    ``distill_extra=(x_open_like, targets)`` adds the FD regularizer (Eq. 7):
+    ``distill_extra`` is an optional per-sample soft-target array ``(I, C)``
+    aligned with ``x``; when given it adds the FD regularizer (Eq. 7):
     gamma * CE(distill targets) on the *private* inputs."""
     n = x.shape[0]
 
@@ -100,6 +101,24 @@ def local_distill(spec: LocalSpec, params, state, opt_state, x_open,
 
 
 def predict_probs(apply_fn: Callable, params, state, x, batch_size: int = 0):
-    """Inference probabilities on the open batch ("2. Prediction", Eq. 9)."""
-    logits, _ = apply_fn(params, state, x, False)
-    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    """Inference probabilities on the open batch ("2. Prediction", Eq. 9).
+
+    ``batch_size > 0`` chunks the forward pass with ``lax.map`` so large open
+    batches never materialize one giant activation set (the tail chunk is
+    wrap-padded and the padding rows dropped)."""
+    n = x.shape[0]
+    if batch_size <= 0 or batch_size >= n:
+        logits, _ = apply_fn(params, state, x, False)
+        return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    nb = -(-n // batch_size)
+    pad = nb * batch_size - n
+    if pad:
+        x = jnp.concatenate([x, x[:pad]], axis=0)
+    chunks = x.reshape((nb, batch_size) + x.shape[1:])
+
+    def chunk_probs(xb):
+        logits, _ = apply_fn(params, state, xb, False)
+        return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    probs = jax.lax.map(chunk_probs, chunks)
+    return probs.reshape((nb * batch_size,) + probs.shape[2:])[:n]

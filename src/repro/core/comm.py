@@ -16,6 +16,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 FLOAT_BYTES = 4
+HALF_BYTES = 2
 INT_BYTES = 4
 
 
@@ -43,6 +44,11 @@ class CommModel:
         payload = self.open_batch * k * (FLOAT_BYTES + INT_BYTES)
         return payload * (self.n_clients + 1)
 
+    def dsfl_fp16_round(self) -> int:
+        """Beyond-paper half-precision logit exchange."""
+        payload = self.open_batch * self.n_classes * HALF_BYTES
+        return payload * (self.n_clients + 1)
+
     def round_bytes(self, method: str, topk: int | None = None) -> int:
         if method == "fl":
             return self.fl_round()
@@ -52,6 +58,8 @@ class CommModel:
             return self.dsfl_round()
         if method == "dsfl_topk":
             return self.dsfl_topk_round(topk or 32)
+        if method == "dsfl_fp16":
+            return self.dsfl_fp16_round()
         if method == "single":
             return 0
         raise ValueError(method)

@@ -1,0 +1,132 @@
+"""`FedEngine` — one algorithm-agnostic federated trainer.
+
+Generalizes the seed `protocol.DSFLEngine` to any `FedAlgorithm`: jits the
+algorithm's round once, samples the shared open batch o_r (when the
+algorithm uses one), runs test-set eval through ``algo.eval_params``,
+accumulates a scalar history, measures wire bytes through a `wire.Codec`,
+and checkpoints the full typed `RoundState` with the msgpack backend.
+
+RNG discipline matches the seed engine exactly (``rng, rk, ri =
+split(rng, 3)`` per round; o_r drawn from ``ri``; the round keyed by
+``rk``) so `DSFLAlgorithm` under this engine is bit-for-bit identical to
+the reference `DSFLEngine` — asserted by ``tests/test_engine.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import load_pytree, save_pytree
+from .algorithms import BatchCtx, EMPTY, FedAlgorithm, RoundState
+# re-exported so new-API callers need only this module (the implementation
+# lives with the reference engine)
+from .protocol import make_eval_fn  # noqa: F401
+from .wire import Codec, DenseF32Codec, nbytes
+
+
+@dataclass
+class FedEngine:
+    """Python-level orchestration around ``jax.jit(algo.round)``.
+
+    ``eval_fn(params, model_state) -> dict`` is called on
+    ``algo.eval_params(state)`` every ``log_every`` rounds; its scalars join
+    the round metrics in ``history``.  Non-scalar round metrics (e.g. FD's
+    (C, C) global logit) are kept out of the history but exposed on
+    ``last_metrics``.  ``on_round(r, state) -> state`` runs un-jitted
+    between rounds (attack injection, LR rescheduling, ...)."""
+    algo: FedAlgorithm
+    eval_fn: Optional[Callable] = None
+    codec: Codec = field(default_factory=DenseF32Codec)
+    on_round: Optional[Callable] = None
+    history: list = field(default_factory=list)
+    last_metrics: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._round = jax.jit(self.algo.round)
+
+    # ------------------------------------------------------------- setup ----
+    def init(self, model_init: Callable, data, rng=None) -> RoundState:
+        if rng is None:
+            rng = jax.random.PRNGKey(self.algo.hp.seed)
+        return self.algo.init(rng, model_init, data)
+
+    def make_ctx(self, data, o_idx=EMPTY, weights=EMPTY) -> BatchCtx:
+        open_x = data.open_x if self.algo.uses_open else EMPTY
+        return BatchCtx(x=data.x_clients, y=data.y_clients,
+                        open_x=open_x, o_idx=o_idx, weights=weights)
+
+    # --------------------------------------------------------------- run ----
+    def run(self, state: RoundState, data, rounds: Optional[int] = None,
+            weights=EMPTY, log_every: int = 1,
+            start_round: int = 0) -> RoundState:
+        """Run ``rounds`` federated rounds starting at ``start_round``.
+
+        To resume from a checkpoint, pass the number of rounds already run
+        as ``start_round``: the per-round RNG chain is fast-forwarded past
+        them, so a save/load/run sequence continues the exact key stream
+        (and round numbering) an uninterrupted run would have produced."""
+        hp = self.algo.hp
+        rounds = hp.rounds if rounds is None else rounds
+        rng = jax.random.PRNGKey(hp.seed)
+        for _ in range(start_round):
+            rng, _, _ = jax.random.split(rng, 3)
+        if self.algo.uses_open:
+            n_open = data.open_x.shape[0]
+            n_r = min(hp.open_batch, n_open)
+        for r in range(start_round, start_round + rounds):
+            rng, rk, ri = jax.random.split(rng, 3)
+            o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
+                     if self.algo.uses_open else EMPTY)
+            ctx = self.make_ctx(data, o_idx=o_idx, weights=weights)
+            state, m = self._round(state, ctx, rk)
+            if self.on_round is not None:
+                state = self.on_round(r, state)
+            self.last_metrics = m
+            if (r + 1) % log_every == 0:
+                rec = {"round": r + 1,
+                       **{k: float(v) for k, v in m.items() if v.ndim == 0}}
+                if self.eval_fn is not None:
+                    rec.update(self.eval_fn(*self.algo.eval_params(state)))
+                self.history.append(rec)
+        return state
+
+    # -------------------------------------------------------- comm bytes ----
+    def measured_round_bytes(self, state: RoundState, data,
+                             n_clients: Optional[int] = None) -> int:
+        """Per-round wire bytes of this algorithm under ``self.codec``,
+        measured on the actually-encoded payload pytree (via ``eval_shape``,
+        so it costs no compute): K client uploads + 1 multicast broadcast of
+        the same payload shape — the convention `comm.CommModel` uses."""
+        K = data.x_clients.shape[0] if n_clients is None else n_clients
+        if self.algo.uses_open:
+            n_r = min(self.algo.hp.open_batch, data.open_x.shape[0])
+            o_idx = jnp.zeros((n_r,), jnp.int32)
+        else:
+            o_idx = EMPTY
+        ctx = self.make_ctx(data, o_idx=o_idx)
+        enc = jax.eval_shape(
+            lambda s, c: self.codec.encode(self.algo.upload_payload(s, c)),
+            state, ctx)
+        return nbytes(enc) * (K + 1)
+
+    # ------------------------------------------------------- checkpointing --
+    def save_state(self, path: str, state: RoundState) -> None:
+        import numpy as np
+        leaves = jax.tree_util.tree_flatten(state)[0]
+        tag = np.frombuffer(self.algo.name.encode(), dtype=np.uint8)
+        save_pytree(path, {"algo": tag, "leaves": leaves})
+
+    def load_state(self, path: str, like: RoundState) -> RoundState:
+        """Restore a state saved by ``save_state``.  ``like`` supplies the
+        treedef (e.g. a freshly-inited state of the same algorithm)."""
+        import numpy as np
+        raw = load_pytree(path)
+        tag = bytes(np.asarray(raw["algo"]).tobytes()).decode()
+        if tag != self.algo.name:
+            raise ValueError(f"checkpoint is for {tag!r}, "
+                             f"engine runs {self.algo.name!r}")
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, raw["leaves"])

@@ -52,7 +52,10 @@ def distill_targets(tg, tk_self, n_own, y):
 
 def make_fd_round(spec: LocalSpec, n_classes: int, gamma: float = 1.0):
     """One FD round over stacked clients.  Returns updated stacks + the global
-    per-class logit (for Fig. 2-style analysis)."""
+    per-class logit (for Fig. 2-style analysis).
+
+    .. deprecated:: prefer ``algorithms.FDAlgorithm`` under
+       ``engine.FedEngine`` (same math, unified API)."""
 
     def round_fn(wk, sk, ok, x, y, rng):
         K = x.shape[0]

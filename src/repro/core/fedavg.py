@@ -29,7 +29,10 @@ def weighted_average(stacked, weights: jax.Array):
 def make_fedavg_round(spec: LocalSpec):
     """Returns a jitted round: (w0, s0, data, weights, rng) -> (w0', s0', loss).
     Malicious clients (model poisoning) are injected by the caller via the
-    ``override`` hook on the stacked client params."""
+    ``override`` hook on the stacked client params.
+
+    .. deprecated:: prefer ``algorithms.FedAvgAlgorithm`` under
+       ``engine.FedEngine`` (same math, unified API)."""
 
     def round_fn(w0, s0, x, y, weights, rng, override=None):
         K = x.shape[0]

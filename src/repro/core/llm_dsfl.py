@@ -131,7 +131,8 @@ def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
         # and all-gathers the dense teacher (measured: 10 GB cross-pod).
         # A pod-axis shard_map pins the all-gather on the (value, index)
         # pairs — k*(4+4) bytes/token of inter-pod traffic.
-        mesh = jax.sharding.get_abstract_mesh()
+        _get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+        mesh = _get_mesh() if _get_mesh is not None else None
         if mesh is not None and "pod" in mesh.axis_names:
             from jax.sharding import PartitionSpec as P
             sm = jax.shard_map(

@@ -52,7 +52,7 @@ def make_dsfl_round(apply_fn: Callable, hp: DSFLConfig,
 
     def round_fn(wk, sk, ouk, odk, wg, sg, odg, x, y, open_x, o_idx, rng):
         K = x.shape[0]
-        r1, r2, r3 = jax.random.split(rng, 3)
+        r1, r2, r3, r4 = jax.random.split(rng, 4)
         xo = jnp.take(open_x, o_idx, axis=0)
 
         # 1. Update
@@ -76,9 +76,10 @@ def make_dsfl_round(apply_fn: Callable, hp: DSFLConfig,
                                               global_logit, rk)
         )(wk, sk, odk, jax.random.split(r2, K))
 
-        # 6'. server global model (Eq. 11)
+        # 6'. server global model (Eq. 11) — own key, so the server's distill
+        # minibatch permutations are independent of the clients' (r2)
         wg, sg, odg, gd_loss = local_distill(spec_d, wg, sg, odg, xo,
-                                             global_logit, r2)
+                                             global_logit, r4)
 
         metrics = {"update_loss": jnp.mean(up_loss),
                    "distill_loss": jnp.mean(d_loss),
@@ -92,7 +93,12 @@ def make_dsfl_round(apply_fn: Callable, hp: DSFLConfig,
 
 @dataclass
 class DSFLEngine:
-    """Python-level orchestration: round jitting, o_r sampling, eval, history."""
+    """Python-level orchestration: round jitting, o_r sampling, eval, history.
+
+    .. deprecated:: use ``repro.core.engine.FedEngine`` with
+       ``repro.core.algorithms.DSFLAlgorithm`` — the algorithm-agnostic
+       trainer that also runs FD and FedAvg.  This class is kept as the
+       golden reference for the parity test and for old callers."""
     apply_fn: Callable
     hp: DSFLConfig
     eval_fn: Callable                      # (w, s) -> dict of metrics

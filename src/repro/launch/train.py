@@ -20,7 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, list_archs
-from ..core.llm_dsfl import (LLMDsflHP, dsfl_round_step, sgd_train_step)
+from ..core import wire
+from ..core.comm import fmt_bytes
+from ..core.llm_dsfl import (LLMDsflHP, dsfl_round_step, predict_open_probs,
+                             sgd_train_step)
 from ..data.pipeline import lm_open_batch, lm_private_batches
 from ..models.api import model_init
 from ..models.base import param_count
@@ -79,6 +82,18 @@ def main(argv=None):
         private.update({k: jnp.broadcast_to(v[None], (K,) + v.shape)
                         for k, v in ex.items()})
         open_b.update(ex)
+        # measured per-round exchange bytes (eval_shape: no compute), the
+        # LLM-scale analogue of the paper's Table 1/2 upload accounting
+        one = jax.tree.map(lambda a: a[0], stacked)
+        up = jax.eval_shape(lambda p: predict_open_probs(cfg, p, open_b), one)
+        if args.topk is not None:
+            up = jax.eval_shape(
+                wire.TopKCodec(k=args.topk, n_classes=cfg.vocab).encode, up)
+        ex_bytes = wire.nbytes(up) * (K + 1)
+        fedavg_bytes = wire.nbytes(one) * (K + 1)
+        print(f"exchange/round: {fmt_bytes(ex_bytes)} "
+              f"(FedAvg parameter exchange would be "
+              f"{fmt_bytes(fedavg_bytes)})")
         step = jax.jit(lambda p, pb, ob: dsfl_round_step(cfg, p, pb, ob, hp))
         params = stacked
         for i in range(args.steps):

@@ -1,0 +1,122 @@
+"""Wire-format codecs: encode->decode round trips, and measured payload
+bytes == `CommModel`'s analytic per-round bytes for every codec/algorithm
+(the Table 1/2 cross-check, on real tensors)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.algorithms import (DSFLAlgorithm, FDAlgorithm, FDConfig,
+                                   FedAvgAlgorithm, FedAvgConfig)
+from repro.core.comm import CommModel
+from repro.core.engine import FedEngine
+from repro.core.protocol import DSFLConfig
+from repro.data.pipeline import build_image_task
+from repro.models.base import param_count
+from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
+
+K, N, C = 4, 80, 10
+
+
+def _init(k):
+    return init_mnist_cnn(k, image_hw=16, widths=(8, 16), fc=32)
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_image_task(seed=0, K=K, n_private=320, n_open=N,
+                            n_test=80, distribution="non_iid")
+
+
+@pytest.fixture(scope="module")
+def probs(rng):
+    return jax.nn.softmax(jax.random.normal(rng, (N, C)), -1)
+
+
+# ------------------------------------------------------------ round trips ----
+def test_dense_f32_roundtrip_exact(probs):
+    codec = wire.DenseF32Codec()
+    out = codec.decode(codec.encode(probs))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(probs))
+
+
+def test_fp16_roundtrip_within_half_precision(probs):
+    codec = wire.FP16Codec()
+    enc = codec.encode(probs)
+    assert jax.tree.leaves(enc)[0].dtype == jnp.float16
+    out = codec.decode(enc)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(probs), atol=5e-4)
+
+
+def test_topk_roundtrip_identity_when_k_equals_C(probs):
+    codec = wire.TopKCodec(k=C, n_classes=C)
+    out = codec.decode(codec.encode(probs))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(probs), atol=1e-6)
+
+
+def test_topk_decoded_is_renormalized_distribution(probs):
+    codec = wire.TopKCodec(k=3, n_classes=C)
+    out = codec.decode(codec.encode(probs))
+    np.testing.assert_allclose(np.sum(np.asarray(out), -1), 1.0, atol=1e-5)
+    # kept entries are the k largest, rescaled; dropped entries are zero
+    assert int(np.count_nonzero(np.asarray(out)[0])) <= 3
+
+
+def test_codecs_encode_whole_pytrees(rng):
+    tree = {"a": jax.random.normal(rng, (3, C)),
+            "b": [jax.random.normal(rng, (2, 2, C))]}
+    codec = wire.FP16Codec()
+    out = codec.decode(codec.encode(tree))
+    assert set(out) == {"a", "b"}
+    assert out["a"].dtype == jnp.float32
+
+
+# ----------------------------------------------- measured == analytic --------
+def test_measured_equals_analytic_for_every_dsfl_codec(task):
+    hp = DSFLConfig(rounds=1, local_epochs=1, distill_epochs=1, batch_size=40,
+                    open_batch=N)
+    algo = DSFLAlgorithm(apply_mnist_cnn, hp)
+    key = jax.random.PRNGKey(0)
+    state = algo.init(key, _init, task)
+    cm = CommModel(K, C, 0, N)
+    cases = [(wire.DenseF32Codec(), cm.dsfl_round()),
+             (wire.FP16Codec(), cm.dsfl_fp16_round()),
+             (wire.TopKCodec(k=5, n_classes=C), cm.dsfl_topk_round(5))]
+    for codec, analytic in cases:
+        eng = FedEngine(algo, codec=codec)
+        assert eng.measured_round_bytes(state, task) == analytic, codec.name
+
+
+def test_measured_equals_analytic_fd(task):
+    algo = FDAlgorithm(apply_mnist_cnn, FDConfig(rounds=1, n_classes=C))
+    state = algo.init(jax.random.PRNGKey(0), _init, task)
+    cm = CommModel(K, C, 0, N)
+    assert FedEngine(algo).measured_round_bytes(state, task) == cm.fd_round()
+
+
+def test_measured_equals_analytic_fedavg(task):
+    algo = FedAvgAlgorithm(apply_mnist_cnn, FedAvgConfig(rounds=1))
+    state = algo.init(jax.random.PRNGKey(0), _init, task)
+    n_params = (param_count(state.server.params)
+                + param_count(state.server.model_state))
+    cm = CommModel(K, C, n_params, N)
+    assert FedEngine(algo).measured_round_bytes(state, task) == cm.fl_round()
+
+
+def test_payload_bytes_counts_encoded_not_decoded(probs):
+    dense = wire.DenseF32Codec()
+    half = wire.FP16Codec()
+    topk = wire.TopKCodec(k=5, n_classes=C)
+    d = dense.payload_bytes(dense.encode(probs))
+    assert d == N * C * 4
+    assert half.payload_bytes(half.encode(probs)) == d // 2
+    assert topk.payload_bytes(topk.encode(probs)) == N * 5 * 8
+
+
+def test_make_codec_registry():
+    assert isinstance(wire.make_codec("dense_f32"), wire.DenseF32Codec)
+    assert wire.make_codec("topk", k=7, n_classes=C).k == 7
+    with pytest.raises(KeyError):
+        wire.make_codec("zstd")
