@@ -2,8 +2,12 @@
 collective bytes of one DS-FL round vs one FedAvg round on the 2x16x16
 production mesh (2 pods = 2 federated clients).
 
-DS-FL's only cross-pod traffic is the open-batch logit all-reduce; FedAvg
-all-reduces every parameter.  Both are read straight from the compiled HLO.
+Both rounds are the unified `FedAlgorithm` implementations
+(`core.llm_algorithms`) — the same ``round``/``shardings`` surface
+`FedEngine` jits — lowered here with explicit in_shardings so the
+collectives can be read straight from the compiled HLO.  DS-FL's only
+cross-pod traffic is the open-batch logit exchange; FedAvg all-reduces
+every parameter.
 
 Needs the 512-device dry-run environment:
   PYTHONPATH=src python examples/multi_pod_comm.py --arch qwen1.5-4b
@@ -12,22 +16,21 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
-import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.llm_dsfl import LLMDsflHP, dsfl_round_step, fedavg_round_step
+from repro.core.algorithms import BatchCtx, ClientState, RoundState
+from repro.core.llm_algorithms import (LLMDSFLAlgorithm, LLMFedAvgAlgorithm,
+                                       LLMFedAvgHP)
+from repro.core.llm_dsfl import LLMDsflHP
 from repro.core.comm import fmt_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_bytes, cross_pod_bytes
-from repro.launch.sharding import batch_specs, param_specs, to_named
 from repro.launch.specs import input_specs
 from repro.models.shardctx import axis_ctx
 from repro.configs.shapes import InputShape
-
-
-
 
 
 def main():
@@ -43,26 +46,23 @@ def main():
     shape = InputShape("custom", args.seq, args.batch, "train")
     spec = input_specs(cfg, shape, n_clients=2, topk=args.topk)
     ecfg = spec["cfg"]
-    pspec = to_named(mesh, param_specs(ecfg, spec["params"], mesh,
-                                       client_axis="pod"))
-    bspec = to_named(mesh, batch_specs(spec["private"], mesh,
-                                       client_axis="pod"))
-    ospec = to_named(mesh, batch_specs(spec["open"], mesh))
+    n_open = jax.tree.leaves(spec["open"])[0].shape[0]
+    o_idx = jax.ShapeDtypeStruct((n_open,), jnp.int32)
+    key = jax.random.PRNGKey(0)
 
+    cases = [
+        ("dsfl_round", LLMDSFLAlgorithm(ecfg, LLMDsflHP(topk=args.topk)),
+         BatchCtx(x=spec["private"], open_x=spec["open"], o_idx=o_idx)),
+        ("fedavg_round", LLMFedAvgAlgorithm(ecfg, LLMFedAvgHP(lr=1e-4)),
+         BatchCtx(x=spec["private"])),
+    ]
     results = {}
-    for name, fn in [
-        ("dsfl_round", functools.partial(dsfl_round_step, ecfg,
-                                         hp=LLMDsflHP(topk=args.topk))),
-        ("fedavg_round", functools.partial(fedavg_round_step, ecfg, lr=1e-4)),
-    ]:
-        if name == "fedavg_round":
-            jitted = jax.jit(fn, in_shardings=(pspec, bspec))
-            a = (spec["params"], spec["private"])
-        else:
-            jitted = jax.jit(fn, in_shardings=(pspec, bspec, ospec))
-            a = (spec["params"], spec["private"], spec["open"])
+    for name, algo, ctx in cases:
+        state = RoundState(clients=ClientState(params=spec["params"]))
+        st_sh, ctx_sh = algo.shardings(mesh, state, ctx)
+        jitted = jax.jit(algo.round, in_shardings=(st_sh, ctx_sh, None))
         with axis_ctx(mesh, batch_axes=("data",)):
-            compiled = jitted.lower(*a).compile()
+            compiled = jitted.lower(state, ctx, key).compile()
         txt = compiled.as_text()
         coll = cross_pod_bytes(txt)
         total = collective_bytes(txt)

@@ -10,6 +10,13 @@ The same three lines run any algorithm in the repo:
 
   PYTHONPATH=src python examples/quickstart.py          # ~2 min on CPU
   PYTHONPATH=src python examples/quickstart.py --fast   # smoke (~40 s)
+
+On TPU/GPU the server's "4. Aggregation" can run through the fused Pallas
+mean+sharpen kernel: ``aggregation.era(probs, T, use_kernel=True)`` (or
+``aggregate(..., use_kernel=True)``).  Its ``interpret`` flag defaults to
+auto — interpret mode on CPU (this container), the compiled kernel on real
+hardware — so the same call works in both places; any open-batch size is
+fine (the kernel pads its row blocks internally).
 """
 import argparse
 import sys

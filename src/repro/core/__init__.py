@@ -4,4 +4,4 @@
 # unified FedAlgorithm API; `protocol.DSFLEngine` et al. are kept as
 # deprecated reference implementations.
 from . import aggregation, algorithms, attacks, client, comm, engine, fd, \
-    fedavg, llm_dsfl, losses, protocol, wire  # noqa
+    fedavg, llm_algorithms, llm_dsfl, losses, protocol, wire  # noqa

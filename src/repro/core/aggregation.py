@@ -28,31 +28,41 @@ def sa(local_probs: jax.Array) -> jax.Array:
 
 
 def era(local_probs: jax.Array, temperature: float = 0.1,
-        use_kernel: bool = False) -> jax.Array:
-    """Entropy-reduction aggregation (Eq. 13): sharpen the mean."""
+        use_kernel: bool = False,
+        interpret: bool | None = None) -> jax.Array:
+    """Entropy-reduction aggregation (Eq. 13): sharpen the mean.
+
+    ``use_kernel=True`` routes through the fused Pallas mean+softmax kernel;
+    ``interpret=None`` auto-selects interpret mode on CPU only, so the kernel
+    path actually compiles on TPU/GPU instead of silently interpreting."""
     if use_kernel:
         from repro.kernels import ops as kops
-        return kops.era_sharpen(local_probs, temperature)
+        return kops.era_sharpen(local_probs, temperature, interpret=interpret)
     mean = sa(local_probs)
     return jax.nn.softmax(mean / temperature, axis=-1)
 
 
 def weighted_era(local_probs: jax.Array, weights: jax.Array,
                  temperature: float = 0.1) -> jax.Array:
-    """Reliability-weighted ERA. weights: (K,) nonneg, normalized here."""
+    """Reliability-weighted ERA. weights: (K,) nonneg, normalized here.
+    An all-zero weight vector falls back to uniform weights explicitly
+    (== plain ERA) instead of silently sharpening a zero mean."""
     w = weights.astype(F32)
-    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+    total = jnp.sum(w)
+    uniform = jnp.full_like(w, 1.0 / w.shape[0])
+    w = jnp.where(total > 0, w / jnp.maximum(total, 1e-9), uniform)
     mean = jnp.einsum("k,k...->...", w, local_probs.astype(F32))
     return jax.nn.softmax(mean / temperature, axis=-1)
 
 
 def aggregate(local_probs: jax.Array, method: str = "era",
               temperature: float = 0.1, weights=None,
-              use_kernel: bool = False) -> jax.Array:
+              use_kernel: bool = False,
+              interpret: bool | None = None) -> jax.Array:
     if method == "sa":
         return sa(local_probs)
     if method == "era":
-        return era(local_probs, temperature, use_kernel)
+        return era(local_probs, temperature, use_kernel, interpret)
     if method == "weighted_era":
         assert weights is not None
         return weighted_era(local_probs, weights, temperature)

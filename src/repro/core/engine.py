@@ -4,7 +4,14 @@ Generalizes the seed `protocol.DSFLEngine` to any `FedAlgorithm`: jits the
 algorithm's round once, samples the shared open batch o_r (when the
 algorithm uses one), runs test-set eval through ``algo.eval_params``,
 accumulates a scalar history, measures wire bytes through a `wire.Codec`,
-and checkpoints the full typed `RoundState` with the msgpack backend.
+and checkpoints the full typed `RoundState` with the msgpack backend —
+together with the round counter and history, so save/load/run resumes the
+exact RNG stream without the caller hand-tracking ``start_round``.
+
+For the pod-scale LLM algorithms, pass ``mesh=`` (and optionally
+``donate_state=True``): the engine builds its jit with mesh-aware
+``in_shardings`` from ``algo.shardings(mesh, state, ctx)`` — the
+`launch.sharding` placement rules — and donates the round state's buffers.
 
 RNG discipline matches the seed engine exactly (``rng, rk, ri =
 split(rng, 3)`` per round; o_r drawn from ``ri``; the round keyed by
@@ -13,8 +20,9 @@ the reference `DSFLEngine` — asserted by ``tests/test_engine.py``.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +35,11 @@ from .protocol import make_eval_fn  # noqa: F401
 from .wire import Codec, DenseF32Codec, nbytes
 
 
+def _leading_dim(tree) -> int:
+    """First-axis size of a (possibly dict-of-arrays) batch pytree."""
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
 @dataclass
 class FedEngine:
     """Python-level orchestration around ``jax.jit(algo.round)``.
@@ -36,21 +49,48 @@ class FedEngine:
     the round metrics in ``history``.  Non-scalar round metrics (e.g. FD's
     (C, C) global logit) are kept out of the history but exposed on
     ``last_metrics``.  ``on_round(r, state) -> state`` runs un-jitted
-    between rounds (attack injection, LR rescheduling, ...)."""
+    between rounds (attack injection, LR rescheduling, ...).
+
+    ``mesh``: when set and the algorithm exposes ``shardings``, the round is
+    jitted with mesh-aware ``in_shardings`` (built lazily from the first
+    round's state/ctx).  ``donate_state=True`` donates the round-state
+    buffers to the jit (halves peak params memory for the LLM algorithms).
+    ``rounds_done`` counts completed rounds; it is checkpointed by
+    ``save_state`` and restored by ``load_state`` so a resumed ``run``
+    continues the per-round RNG chain automatically."""
     algo: FedAlgorithm
     eval_fn: Optional[Callable] = None
     codec: Codec = field(default_factory=DenseF32Codec)
     on_round: Optional[Callable] = None
+    mesh: Optional[Any] = None
+    donate_state: bool = False
     history: list = field(default_factory=list)
     last_metrics: dict = field(default_factory=dict)
+    rounds_done: int = 0
 
     def __post_init__(self):
-        self._round = jax.jit(self.algo.round)
+        self._round = None   # built on first use (shardings need state/ctx)
+
+    def _build_round(self, state: RoundState, ctx: BatchCtx):
+        kw = {}
+        if self.donate_state:
+            kw["donate_argnums"] = (0,)
+        shard_fn = getattr(self.algo, "shardings", None)
+        if self.mesh is not None and shard_fn is not None:
+            state_sh, ctx_sh = shard_fn(self.mesh, state, ctx)
+            kw["in_shardings"] = (state_sh, ctx_sh, None)
+        return jax.jit(self.algo.round, **kw)
 
     # ------------------------------------------------------------- setup ----
     def init(self, model_init: Callable, data, rng=None) -> RoundState:
+        """Fresh-training entry point: also resets ``rounds_done`` and
+        ``history`` so a reused engine doesn't fast-forward the new run's
+        RNG stream past the previous training's rounds (resume goes through
+        ``load_state``, which restores both instead)."""
         if rng is None:
             rng = jax.random.PRNGKey(self.algo.hp.seed)
+        self.rounds_done = 0
+        self.history = []
         return self.algo.init(rng, model_init, data)
 
     def make_ctx(self, data, o_idx=EMPTY, weights=EMPTY) -> BatchCtx:
@@ -61,33 +101,38 @@ class FedEngine:
     # --------------------------------------------------------------- run ----
     def run(self, state: RoundState, data, rounds: Optional[int] = None,
             weights=EMPTY, log_every: int = 1,
-            start_round: int = 0) -> RoundState:
-        """Run ``rounds`` federated rounds starting at ``start_round``.
-
-        To resume from a checkpoint, pass the number of rounds already run
-        as ``start_round``: the per-round RNG chain is fast-forwarded past
-        them, so a save/load/run sequence continues the exact key stream
-        (and round numbering) an uninterrupted run would have produced."""
+            start_round: Optional[int] = None) -> RoundState:
+        """Run ``rounds`` federated rounds starting at ``start_round``
+        (default: ``self.rounds_done``, which ``load_state`` restores from a
+        checkpoint).  The per-round RNG chain is fast-forwarded past the
+        rounds already run, so a save/load/run sequence — or repeated
+        ``run(rounds=1)`` calls on one engine — continues the exact key
+        stream (and round numbering) an uninterrupted run would produce."""
         hp = self.algo.hp
         rounds = hp.rounds if rounds is None else rounds
+        start = self.rounds_done if start_round is None else start_round
         rng = jax.random.PRNGKey(hp.seed)
-        for _ in range(start_round):
+        for _ in range(start):
             rng, _, _ = jax.random.split(rng, 3)
         if self.algo.uses_open:
-            n_open = data.open_x.shape[0]
+            n_open = _leading_dim(data.open_x)
             n_r = min(hp.open_batch, n_open)
-        for r in range(start_round, start_round + rounds):
+        for r in range(start, start + rounds):
             rng, rk, ri = jax.random.split(rng, 3)
             o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
                      if self.algo.uses_open else EMPTY)
             ctx = self.make_ctx(data, o_idx=o_idx, weights=weights)
+            if self._round is None:
+                self._round = self._build_round(state, ctx)
             state, m = self._round(state, ctx, rk)
             if self.on_round is not None:
                 state = self.on_round(r, state)
             self.last_metrics = m
+            self.rounds_done = r + 1
             if (r + 1) % log_every == 0:
                 rec = {"round": r + 1,
-                       **{k: float(v) for k, v in m.items() if v.ndim == 0}}
+                       **{k: float(v) for k, v in m.items()
+                          if jnp.ndim(v) == 0}}
                 if self.eval_fn is not None:
                     rec.update(self.eval_fn(*self.algo.eval_params(state)))
                 self.history.append(rec)
@@ -100,9 +145,9 @@ class FedEngine:
         measured on the actually-encoded payload pytree (via ``eval_shape``,
         so it costs no compute): K client uploads + 1 multicast broadcast of
         the same payload shape — the convention `comm.CommModel` uses."""
-        K = data.x_clients.shape[0] if n_clients is None else n_clients
+        K = _leading_dim(data.x_clients) if n_clients is None else n_clients
         if self.algo.uses_open:
-            n_r = min(self.algo.hp.open_batch, data.open_x.shape[0])
+            n_r = min(self.algo.hp.open_batch, _leading_dim(data.open_x))
             o_idx = jnp.zeros((n_r,), jnp.int32)
         else:
             o_idx = EMPTY
@@ -117,11 +162,21 @@ class FedEngine:
         import numpy as np
         leaves = jax.tree_util.tree_flatten(state)[0]
         tag = np.frombuffer(self.algo.name.encode(), dtype=np.uint8)
-        save_pytree(path, {"algo": tag, "leaves": leaves})
+        hist = np.frombuffer(json.dumps(self.history, default=float).encode(),
+                             dtype=np.uint8)
+        save_pytree(path, {"algo": tag, "leaves": leaves,
+                           "round": np.int64(self.rounds_done),
+                           "history": hist})
 
-    def load_state(self, path: str, like: RoundState) -> RoundState:
+    def load_state(self, path: str, like: RoundState,
+                   shardings=None) -> RoundState:
         """Restore a state saved by ``save_state``.  ``like`` supplies the
-        treedef (e.g. a freshly-inited state of the same algorithm)."""
+        treedef (e.g. a freshly-inited state of the same algorithm);
+        ``shardings`` (a pytree of `jax.sharding.Sharding` matching the
+        state, e.g. from ``algo.shardings``) places each leaf directly onto
+        its shards.  Also restores ``rounds_done`` and ``history`` so a
+        subsequent ``run`` resumes the RNG stream where the checkpoint
+        left off."""
         import numpy as np
         raw = load_pytree(path)
         tag = bytes(np.asarray(raw["algo"]).tobytes()).decode()
@@ -129,4 +184,13 @@ class FedEngine:
             raise ValueError(f"checkpoint is for {tag!r}, "
                              f"engine runs {self.algo.name!r}")
         treedef = jax.tree_util.tree_structure(like)
-        return jax.tree_util.tree_unflatten(treedef, raw["leaves"])
+        state = jax.tree_util.tree_unflatten(treedef, raw["leaves"])
+        if shardings is not None:
+            state = jax.tree.map(lambda a, s: jax.device_put(a, s),
+                                 state, shardings)
+        if "round" in raw:
+            self.rounds_done = int(np.asarray(raw["round"]))
+        if "history" in raw:
+            self.history = json.loads(
+                bytes(np.asarray(raw["history"]).tobytes()).decode())
+        return state

@@ -1,0 +1,156 @@
+"""Pod-scale LLM DS-FL / FedAvg on the unified `FedAlgorithm` API.
+
+`LLMDSFLAlgorithm` wraps `llm_dsfl.dsfl_round_step` (and `LLMFedAvgAlgorithm`
+its `fedavg_round_step` benchmark twin) behind the same two-method surface
+the smallnet algorithms use, so the sharded LLM path shares `FedEngine`:
+typed `RoundState` holding the pod-stacked parameters, `BatchCtx` carrying
+the private token stacks plus the shared open set (sub-sampled per round via
+``o_idx``), msgpack checkpointing, measured wire bytes through the top-k
+codec, and engine-side jit.
+
+Each algorithm additionally exposes ``shardings(mesh, state, ctx)`` returning
+(state, ctx) sharding pytrees built from `launch.sharding`'s name-based rules
+with the federated-client axis on "pod" — `FedEngine(algo, mesh=...)` feeds
+them to ``jax.jit(in_shardings=...)`` (with the state donated when
+``donate_state=True``), which is exactly the placement the multi-pod dry-run
+lowers.  On meshes without a "pod" axis the client axis stays replicated.
+
+The wrappers are pinned bit-for-bit against the raw round steps in
+tests/test_llm_algorithms.py, the LLM analogue of `tests/test_engine.py`'s
+golden parity against `protocol.DSFLEngine`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.base import ModelConfig
+from .algorithms import BatchCtx, ClientState, EMPTY, RoundState
+from .llm_dsfl import (LLMDsflHP, dsfl_round_step, fedavg_round_step,
+                       predict_open_probs)
+
+
+def _take_open(open_x, o_idx):
+    """Gather this round's open batch o_r out of the full shared open set."""
+    return jax.tree.map(lambda a: jnp.take(a, o_idx, axis=0), open_x)
+
+
+def _first_client(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _mean_clients(tree):
+    return jax.tree.map(
+        lambda a: jnp.mean(a.astype(jnp.float32), axis=0).astype(a.dtype),
+        tree)
+
+
+def _stack_init(model_init, rng, data):
+    K = jax.tree.leaves(data.x_clients)[0].shape[0]
+    return jax.vmap(model_init)(jax.random.split(rng, K))
+
+
+def _shardings(cfg: ModelConfig, mesh, state: RoundState, ctx: BatchCtx,
+               with_open: bool):
+    """(state, ctx) sharding pytrees: params P("pod", <tp/fsdp rules>),
+    private batches P("pod", "data", ...), open set data-sharded, indices and
+    the round key replicated."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from ..launch.sharding import batch_specs, param_specs, to_named
+
+    client_axis = "pod" if "pod" in mesh.axis_names else None
+    pshard = to_named(mesh, param_specs(cfg, state.clients.params, mesh,
+                                        client_axis=client_axis))
+    st = RoundState(clients=ClientState(params=pshard))
+    xsh = to_named(mesh, batch_specs(ctx.x, mesh, client_axis=client_axis))
+    if with_open:
+        osh = to_named(mesh, batch_specs(ctx.open_x, mesh))
+        rep = NamedSharding(mesh, P())
+        return st, BatchCtx(x=xsh, open_x=osh, o_idx=rep)
+    return st, BatchCtx(x=xsh)
+
+
+@dataclass(frozen=True)
+class LLMDSFLAlgorithm:
+    """DS-FL at pod scale on the unified API: each federated client is one
+    pod; the round's only cross-pod collective is the open-batch logit
+    exchange (all-gather of top-k pairs under ``hp.topk``)."""
+    cfg: ModelConfig
+    hp: LLMDsflHP
+
+    name = "llm_dsfl"
+    uses_open = True
+
+    def init(self, rng, model_init, data) -> RoundState:
+        return self.init_from(_stack_init(model_init, rng, data))
+
+    def init_from(self, stacked_params) -> RoundState:
+        """Build a RoundState around externally-initialized pod-stacked
+        params (leaves (n_clients, ...))."""
+        return RoundState(clients=ClientState(params=stacked_params))
+
+    def round(self, state: RoundState, ctx: BatchCtx, rng):
+        del rng   # dsfl_round_step is deterministic given the batches
+        open_b = _take_open(ctx.open_x, ctx.o_idx)
+        new, loss = dsfl_round_step(self.cfg, state.clients.params, ctx.x,
+                                    open_b, self.hp)
+        return RoundState(clients=ClientState(params=new)), {"loss": loss}
+
+    def upload_payload(self, state: RoundState, ctx: BatchCtx):
+        """One client's upload: per-token class distributions on o_r —
+        (|o_r|, S, V) bf16, the tensor the wire codec encodes."""
+        open_b = _take_open(ctx.open_x, ctx.o_idx)
+        return predict_open_probs(self.cfg, _first_client(state.clients.params),
+                                  open_b)
+
+    def eval_params(self, state: RoundState):
+        # no server model at LLM scale: score the mean client model (cf. FD)
+        return _mean_clients(state.clients.params), EMPTY
+
+    def shardings(self, mesh, state: RoundState, ctx: BatchCtx):
+        return _shardings(self.cfg, mesh, state, ctx, with_open=True)
+
+
+@dataclass(frozen=True)
+class LLMFedAvgHP:
+    lr: float = 1e-4
+    rounds: int = 10
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class LLMFedAvgAlgorithm:
+    """Benchmark 1 at pod scale: local SGD then a parameter mean over the pod
+    axis — the all-reduce whose bytes equal the model size."""
+    cfg: ModelConfig
+    hp: LLMFedAvgHP
+
+    name = "llm_fedavg"
+    uses_open = False
+
+    def init(self, rng, model_init, data) -> RoundState:
+        return self.init_from(_stack_init(model_init, rng, data))
+
+    def init_from(self, stacked_params) -> RoundState:
+        return RoundState(clients=ClientState(params=stacked_params))
+
+    def round(self, state: RoundState, ctx: BatchCtx, rng):
+        del rng
+        new, loss = fedavg_round_step(self.cfg, state.clients.params, ctx.x,
+                                      self.hp.lr)
+        return RoundState(clients=ClientState(params=new)), {"loss": loss}
+
+    def upload_payload(self, state: RoundState, ctx: BatchCtx):
+        """One client's upload: its full parameter pytree."""
+        return _first_client(state.clients.params)
+
+    def eval_params(self, state: RoundState):
+        # clients are synced by the round's broadcast: any one of them
+        return _first_client(state.clients.params), EMPTY
+
+    def shardings(self, mesh, state: RoundState, ctx: BatchCtx):
+        return _shardings(self.cfg, mesh, state, ctx, with_open=False)

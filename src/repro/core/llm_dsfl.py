@@ -5,6 +5,14 @@ mean inside ``aggregate`` — the paper's communication claim, visible directly
 as all-reduce bytes in the compiled HLO (vs. FedAvg's parameter all-reduce).
 
 Step functions here are mesh-agnostic pure JAX; launch/ assigns shardings.
+
+Note: the bespoke per-step training loop that used to drive these functions
+directly (launch/train.py's LLM branch) is retired — new code runs them
+through `core.llm_algorithms.LLMDSFLAlgorithm` / `LLMFedAvgAlgorithm` on the
+unified `FedEngine`.  The round-step functions below stay as the reference
+implementations the algorithm wrappers are pinned against bit-for-bit
+(tests/test_llm_algorithms.py), mirroring how `protocol.DSFLEngine` backs
+`DSFLAlgorithm`.
 """
 from __future__ import annotations
 
@@ -28,6 +36,11 @@ class LLMDsflHP:
     aux_weight: float = 0.01        # MoE load-balance loss
     topk: int | None = None         # sparsified logit exchange (beyond paper)
     microbatches: int = 1           # gradient accumulation (activation peak /m)
+    # engine-facing fields (`FedEngine` reads rounds/seed/open_batch; the
+    # round-step functions above ignore them)
+    rounds: int = 10
+    seed: int = 0
+    open_batch: int = 8             # |o_r| in sequences per round
 
 
 # ------------------------------------------------------------ plain steps ----
@@ -178,7 +191,6 @@ def fedavg_round_step(cfg: ModelConfig, stacked_params, private_batches,
     avg = jax.tree.map(lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0,
                                              keepdims=True
                                              ).astype(leaf.dtype), new_params)
-    K = jax.tree.leaves(new_params)[0].shape[0]
     broad = jax.tree.map(lambda a, ref: jnp.broadcast_to(a, ref.shape),
                          avg, new_params)
     return broad, jnp.mean(losses)

@@ -46,6 +46,34 @@ def build_image_task(seed: int, K: int, n_private: int, n_open: int,
     return FederatedImageTask(xc, yc, open_x, x_test, y_test, n_classes)
 
 
+@dataclass
+class FederatedLMTask:
+    """LLM-scale federated task for `FedEngine`: batch dicts of token arrays
+    instead of image tensors.  Labels derive from the tokens (next-token
+    prediction), so ``y_clients`` stays an absent pytree slot."""
+    x_clients: dict           # leaves (K, B, S, ...) private token stacks
+    open_x: dict              # leaves (I_o, S, ...) the shared open set
+    y_clients: tuple = ()
+
+
+def build_lm_task(seed: int, K: int, batch: int, seq: int, vocab: int,
+                  n_open: int | None = None,
+                  extras_fn=None) -> FederatedLMTask:
+    """``extras_fn(batch, key) -> dict`` adds modality inputs (vlm patches,
+    audio frames); they are broadcast over the client axis and shared with
+    the open set, mirroring the token layout."""
+    key = jax.random.PRNGKey(seed)
+    kd, ko, ke = jax.random.split(key, 3)
+    private = lm_private_batches(kd, K, batch, seq, vocab)
+    open_b = lm_open_batch(ko, n_open or batch, seq, vocab)
+    if extras_fn is not None:
+        ex = extras_fn(batch, ke)
+        private.update({k: jnp.broadcast_to(v[None], (K,) + v.shape)
+                        for k, v in ex.items()})
+        open_b.update(ex)
+    return FederatedLMTask(x_clients=private, open_x=open_b)
+
+
 def lm_private_batches(key, n_clients: int, batch: int, seq: int, vocab: int):
     """Per-client private token batches for the pod-scale DS-FL round:
     domain d <-> client d (structurally non-IID)."""

@@ -5,6 +5,11 @@ the (K, bn, C) tile is averaged on the VPU and sharpened without writing the
 intermediate mean back to HBM.  Row blocks tile N; the class dim stays whole
 in VMEM (classification regime, C <= ~32k; the large-vocab LLM path uses the
 top-k sparsified exchange instead — see core/aggregation.era_topk).
+
+Non-divisible row counts are handled by zero-padding the row axis up to the
+block size: each row's mean+softmax is independent of every other row, so the
+tail block's padding rows sharpen to garbage (a uniform distribution) and are
+sliced off before returning — no cross-row contamination, no shape asserts.
 """
 from __future__ import annotations
 
@@ -15,6 +20,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 F32 = jnp.float32
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    """Resolve an ``interpret`` flag: ``None`` means auto — interpret mode on
+    CPU (where Mosaic cannot compile), the real compiled kernel elsewhere."""
+    if flag is None:
+        return jax.default_backend() == "cpu"
+    return bool(flag)
 
 
 def _kernel(probs_ref, out_ref, *, inv_temp: float, K: int):
@@ -28,17 +41,24 @@ def _kernel(probs_ref, out_ref, *, inv_temp: float, K: int):
 
 
 def era_sharpen_pallas(local_probs: jax.Array, temperature: float,
-                       block_n: int = 8, interpret: bool = True) -> jax.Array:
-    """local_probs: (K, N, C) -> (N, C) f32."""
+                       block_n: int = 8,
+                       interpret: bool | None = None) -> jax.Array:
+    """local_probs: (K, N, C) -> (N, C) f32.  Any N (rows padded to the block
+    size and sliced back); ``interpret=None`` = auto (CPU only)."""
+    interpret = resolve_interpret(interpret)
     K, N, C = local_probs.shape
     block_n = min(block_n, N)
-    assert N % block_n == 0, (N, block_n)
-    grid = (N // block_n,)
-    return pl.pallas_call(
+    pad = (-N) % block_n
+    if pad:
+        local_probs = jnp.pad(local_probs, ((0, 0), (0, pad), (0, 0)))
+    n_pad = N + pad
+    grid = (n_pad // block_n,)
+    out = pl.pallas_call(
         functools.partial(_kernel, inv_temp=1.0 / temperature, K=K),
         grid=grid,
         in_specs=[pl.BlockSpec((K, block_n, C), lambda n: (0, n, 0))],
         out_specs=pl.BlockSpec((block_n, C), lambda n: (n, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, C), F32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, C), F32),
         interpret=interpret,
     )(local_probs)
+    return out[:N] if pad else out

@@ -1,6 +1,8 @@
 """Jit-ready wrappers around the Pallas kernels (with custom VJPs where the
-training path needs gradients).  ``interpret=True`` everywhere in this
-container (CPU validation); on real TPU hardware flip `INTERPRET` off.
+training path needs gradients).  ``INTERPRET = None`` means auto: interpret
+mode on CPU (this container), the compiled kernel on TPU/GPU.  Set it to
+True/False to force either mode globally, or pass ``interpret=`` per call
+where the wrapper exposes it.
 """
 from __future__ import annotations
 
@@ -10,34 +12,35 @@ import jax
 import jax.numpy as jnp
 
 from .distill_loss import distill_loss_bwd_pallas, distill_loss_fwd_pallas
-from .era_sharpen import era_sharpen_pallas
+from .era_sharpen import era_sharpen_pallas, resolve_interpret
 from .ssd_chunk import ssd_chunk_pallas
 
-INTERPRET = True          # CPU container: interpret mode; TPU target: False
+INTERPRET: bool | None = None     # None = auto (CPU -> interpret, else compiled)
 F32 = jnp.float32
 
 
+def _interp(flag: bool | None = None) -> bool:
+    return resolve_interpret(INTERPRET if flag is None else flag)
+
+
 # ------------------------------------------------------------ era_sharpen ----
-def era_sharpen(local_probs: jax.Array, temperature: float = 0.1) -> jax.Array:
-    """(K, N, C) -> (N, C).  Teacher construction — not differentiated."""
-    K, N, C = local_probs.shape
-    bn = 8
-    while N % bn:
-        bn //= 2
-    out = era_sharpen_pallas(jax.lax.stop_gradient(local_probs), temperature,
-                             block_n=max(bn, 1), interpret=INTERPRET)
-    return out
+def era_sharpen(local_probs: jax.Array, temperature: float = 0.1,
+                interpret: bool | None = None) -> jax.Array:
+    """(K, N, C) -> (N, C).  Teacher construction — not differentiated.
+    Any N (the kernel pads the row axis to its block internally)."""
+    return era_sharpen_pallas(jax.lax.stop_gradient(local_probs), temperature,
+                              interpret=_interp(interpret))
 
 
 # ------------------------------------------------------------ distill loss ---
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def distill_loss_2d(z: jax.Array, t: jax.Array) -> jax.Array:
-    losses, _ = distill_loss_fwd_pallas(z, t, interpret=INTERPRET)
+    losses, _ = distill_loss_fwd_pallas(z, t, interpret=_interp())
     return jnp.mean(losses)
 
 
 def _dl_fwd(z, t):
-    losses, logz = distill_loss_fwd_pallas(z, t, interpret=INTERPRET)
+    losses, logz = distill_loss_fwd_pallas(z, t, interpret=_interp())
     tmass = jnp.sum(t.astype(F32), axis=-1)
     return jnp.mean(losses), (z, t, logz, tmass)
 
@@ -47,7 +50,7 @@ def _dl_bwd(res, g):
     n = z.shape[0]
     gscale = jnp.reshape(g.astype(F32) / n, (1,))
     dz = distill_loss_bwd_pallas(z, t, logz, tmass, gscale,
-                                 interpret=INTERPRET)
+                                 interpret=_interp())
     return dz, None
 
 
@@ -78,5 +81,5 @@ def ssd_chunk(xr, dtr, dAr, Br, Cr, hpg: int) -> jax.Array:
     dA2 = dAr.reshape(B * nc, Q, H)
     B2 = Br.reshape(B * nc, Q, G, N)
     C2 = Cr.reshape(B * nc, Q, G, N)
-    y = ssd_chunk_pallas(x2, dt2, dA2, B2, C2, interpret=INTERPRET)
+    y = ssd_chunk_pallas(x2, dt2, dA2, B2, C2, interpret=_interp())
     return y.reshape(B, nc, Q, H, P)

@@ -6,8 +6,12 @@ import jax
 
 
 def _mk(shape, axes):
+    # jax < 0.5 has no jax.sharding.AxisType (axes are implicitly Auto)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,6 +21,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _mk(shape, axes)
+
+
+def make_client_mesh(n_clients: int):
+    """("pod", "data", "model") mesh over however many real devices exist,
+    with the federated-client axis on "pod" when the device count divides
+    (the 8-fake-device CI tier; collapses to (1, 1, n) on one device)."""
+    n = len(jax.devices())
+    pod = n_clients if n >= n_clients and n % n_clients == 0 else 1
+    return _mk((pod, 1, n // pod), ("pod", "data", "model"))
 
 
 def make_smoke_mesh(*, multi_pod: bool = False):

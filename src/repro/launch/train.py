@@ -1,10 +1,18 @@
 """Training driver.
 
-Two modes:
+Three modes, the federated ones running through the unified
+`FedAlgorithm`/`FedEngine` API (`core.llm_algorithms`):
   * ``--mode dsfl``   - the paper's protocol at LLM scale: K simulated clients
     (vmapped; on the multi-pod mesh the client axis shards over pods), logit
     exchange on a shared open batch, ERA aggregation, hybrid CE+KD local steps.
+  * ``--mode fedavg`` - Benchmark 1 at LLM scale: local SGD + parameter mean
+    (the all-reduce whose bytes the paper's claim is measured against).
   * ``--mode local``  - plain LM pretraining (the "1. Update" benchmark).
+
+The engine jits the round with mesh-aware ``in_shardings`` (client axis on
+"pod" when the device count allows), donates the round state, measures the
+exchange bytes on the encoded wire payload, and msgpack-checkpoints state +
+round counter + history (``--ckpt``; a later run resumes the RNG stream).
 
 On this CPU container use ``--smoke`` (reduced config).  Example:
 
@@ -22,12 +30,16 @@ import jax.numpy as jnp
 from ..configs import get_config, list_archs
 from ..core import wire
 from ..core.comm import fmt_bytes
-from ..core.llm_dsfl import (LLMDsflHP, dsfl_round_step, predict_open_probs,
-                             sgd_train_step)
-from ..data.pipeline import lm_open_batch, lm_private_batches
+from ..core.engine import FedEngine
+from ..core.llm_algorithms import (LLMDSFLAlgorithm, LLMFedAvgAlgorithm,
+                                   LLMFedAvgHP)
+from ..core.llm_dsfl import LLMDsflHP, sgd_train_step
+from ..data.pipeline import build_lm_task, lm_open_batch
 from ..models.api import model_init
 from ..models.base import param_count
+from ..models.shardctx import axis_ctx
 from ..checkpoint import save_pytree
+from .mesh import make_client_mesh
 
 
 def extra_inputs(cfg, batch, key):
@@ -46,7 +58,8 @@ def extra_inputs(cfg, batch, key):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b", choices=list_archs())
-    ap.add_argument("--mode", default="dsfl", choices=["dsfl", "local"])
+    ap.add_argument("--mode", default="dsfl",
+                    choices=["dsfl", "fedavg", "local"])
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--clients", type=int, default=2)
@@ -66,42 +79,47 @@ def main(argv=None):
         cfg = cfg.smoke()
     key = jax.random.PRNGKey(args.seed)
     K = args.clients
-    hp = LLMDsflHP(lr=args.lr, gamma=args.gamma, aggregation=args.aggregation,
-                   topk=args.topk)
 
     print(f"arch={cfg.name} ({cfg.arch_type}) layers={cfg.n_layers} "
           f"d={cfg.d_model} vocab={cfg.vocab}")
-    if args.mode == "dsfl":
-        stacked = jax.vmap(lambda k: model_init(cfg, k))(
-            jax.random.split(key, K))
-        print(f"params/client: {param_count(jax.tree.map(lambda x: x[0], stacked)):,}")
-        kd, ko, ke = jax.random.split(jax.random.fold_in(key, 1), 3)
-        private = lm_private_batches(kd, K, args.batch, args.seq, cfg.vocab)
-        open_b = lm_open_batch(ko, args.batch, args.seq, cfg.vocab)
-        ex = extra_inputs(cfg, args.batch, ke)
-        private.update({k: jnp.broadcast_to(v[None], (K,) + v.shape)
-                        for k, v in ex.items()})
-        open_b.update(ex)
+    if args.mode in ("dsfl", "fedavg"):
+        task = build_lm_task(args.seed, K, args.batch, args.seq, cfg.vocab,
+                             extras_fn=lambda b, k: extra_inputs(cfg, b, k))
+        if args.mode == "dsfl":
+            hp = LLMDsflHP(lr=args.lr, gamma=args.gamma,
+                           aggregation=args.aggregation, topk=args.topk,
+                           rounds=args.steps, seed=args.seed,
+                           open_batch=args.batch)
+            algo = LLMDSFLAlgorithm(cfg, hp)
+            # the wire leg: top-k (value, index) pairs when sparsified, else
+            # half-precision logits (probs travel as bf16 — 2 bytes each)
+            codec = (wire.TopKCodec(k=args.topk, n_classes=cfg.vocab)
+                     if args.topk else wire.FP16Codec())
+        else:
+            algo = LLMFedAvgAlgorithm(cfg, LLMFedAvgHP(
+                lr=args.lr, rounds=args.steps, seed=args.seed))
+            codec = wire.DenseF32Codec()
+        mesh = make_client_mesh(K)
+        eng = FedEngine(algo, codec=codec, mesh=mesh, donate_state=True)
+        state = eng.init(lambda k: model_init(cfg, k), task, rng=key)
+        one = jax.tree.map(lambda a: a[0], state.clients.params)
+        print(f"params/client: {param_count(one):,}")
         # measured per-round exchange bytes (eval_shape: no compute), the
         # LLM-scale analogue of the paper's Table 1/2 upload accounting
-        one = jax.tree.map(lambda a: a[0], stacked)
-        up = jax.eval_shape(lambda p: predict_open_probs(cfg, p, open_b), one)
-        if args.topk is not None:
-            up = jax.eval_shape(
-                wire.TopKCodec(k=args.topk, n_classes=cfg.vocab).encode, up)
-        ex_bytes = wire.nbytes(up) * (K + 1)
+        ex_bytes = eng.measured_round_bytes(state, task)
         fedavg_bytes = wire.nbytes(one) * (K + 1)
         print(f"exchange/round: {fmt_bytes(ex_bytes)} "
               f"(FedAvg parameter exchange would be "
               f"{fmt_bytes(fedavg_bytes)})")
-        step = jax.jit(lambda p, pb, ob: dsfl_round_step(cfg, p, pb, ob, hp))
-        params = stacked
-        for i in range(args.steps):
-            t0 = time.time()
-            params, loss = step(params, private, open_b)
-            loss.block_until_ready()
-            print(f"round {i:3d}  loss {float(loss):.4f}  "
-                  f"{time.time()-t0:.2f}s", flush=True)
+        with axis_ctx(mesh, batch_axes=("data",)):
+            for i in range(args.steps):
+                t0 = time.time()
+                state = eng.run(state, task, rounds=1)
+                print(f"round {i:3d}  loss {eng.history[-1]['loss']:.4f}  "
+                      f"{time.time()-t0:.2f}s", flush=True)
+        if args.ckpt:
+            eng.save_state(args.ckpt, state)
+            print("saved", args.ckpt)
     else:
         params = model_init(cfg, key)
         print(f"params: {param_count(params):,}")
@@ -115,10 +133,9 @@ def main(argv=None):
             loss.block_until_ready()
             print(f"step {i:3d}  loss {float(loss):.4f}  "
                   f"{time.time()-t0:.2f}s", flush=True)
-
-    if args.ckpt:
-        save_pytree(args.ckpt, params)
-        print("saved", args.ckpt)
+        if args.ckpt:
+            save_pytree(args.ckpt, params)
+            print("saved", args.ckpt)
 
 
 if __name__ == "__main__":

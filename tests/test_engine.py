@@ -150,9 +150,49 @@ def test_checkpoint_resume_continues_rng_stream(task, client_params, tmp_path):
     second.run(restored, task, rounds=1, start_round=1)
 
     assert [h["round"] for h in full.history] == [1, 2]
-    assert [h["round"] for h in second.history] == [2]
+    # load_state restored round 1's history record; the resumed round
+    # appended round 2's — identical to the uninterrupted run's
+    assert [h["round"] for h in second.history] == [1, 2]
     for key in full.history[1]:
-        assert full.history[1][key] == second.history[0][key], key
+        assert full.history[1][key] == second.history[1][key], key
+
+
+def test_resume_without_hand_tracked_start_round(task, client_params,
+                                                 tmp_path):
+    """load_state restores rounds_done + history, so a plain run() resumes
+    the RNG stream — no caller-side start_round bookkeeping."""
+    wk, sk, wg, sg = client_params
+    algo = DSFLAlgorithm(apply_mnist_cnn, HP)
+    full = FedEngine(algo)
+    full.run(algo.init_from(wk, sk, wg, sg), task, rounds=2)
+
+    first = FedEngine(algo)
+    mid = first.run(algo.init_from(wk, sk, wg, sg), task, rounds=1)
+    path = os.path.join(tmp_path, "mid.msgpack")
+    first.save_state(path, mid)
+    second = FedEngine(algo)
+    restored = second.load_state(path, algo.init_from(wk, sk, wg, sg))
+    assert second.rounds_done == 1
+    assert second.history == first.history
+    second.run(restored, task, rounds=1)
+    assert second.history == full.history
+
+
+def test_history_accepts_python_scalar_metrics(task, rng):
+    """The history writer must not assume metrics are jax arrays: a plain
+    Python float (e.g. from an un-jitted round) used to raise
+    AttributeError on .ndim."""
+    w0, s0 = _init(rng)
+    algo = FedAvgAlgorithm(apply_mnist_cnn,
+                           FedAvgConfig(rounds=1, local_epochs=1,
+                                        batch_size=40))
+    eng = FedEngine(algo)
+    state = algo.init_from(w0, s0)
+    eng._round = lambda s, c, k: (s, {"py_metric": 0.5,
+                                      "vec": jnp.zeros((3,))})
+    eng.run(state, task, rounds=1)
+    assert eng.history[0]["py_metric"] == 0.5
+    assert "vec" not in eng.history[0]
 
 
 def test_checkpoint_rejects_wrong_algorithm(task, client_params, tmp_path):

@@ -30,6 +30,56 @@ def test_era_sharpen_op_blocks(rng):
     np.testing.assert_allclose(out, ref.era_sharpen_ref(p, 0.1), atol=1e-6)
 
 
+@pytest.mark.parametrize("N,block_n", [(100, 8), (1, 8), (13, 8), (5, 4),
+                                       (9, 16)])
+def test_era_sharpen_nondivisible_rows(rng, N, block_n):
+    # regression: N % block_n != 0 used to assert; the kernel now pads the
+    # row axis and slices the tail back off
+    p = jax.nn.softmax(jax.random.normal(rng, (3, N, 21)), -1)
+    out = era_sharpen_pallas(p, 0.1, block_n=block_n, interpret=True)
+    assert out.shape == (N, 21)
+    np.testing.assert_allclose(out, ref.era_sharpen_ref(p, 0.1), atol=1e-6)
+
+
+def test_era_sharpen_nondivisible_under_jit(rng):
+    p = jax.nn.softmax(jax.random.normal(rng, (2, 100, 17)), -1)
+    out = jax.jit(lambda x: era_sharpen_pallas(x, 0.1, interpret=True))(p)
+    np.testing.assert_allclose(out, ref.era_sharpen_ref(p, 0.1), atol=1e-6)
+
+
+@pytest.mark.parametrize("N", [1, 100, 1000])
+def test_era_kernel_path_any_open_batch(rng, N):
+    """Acceptance pin: era(use_kernel=True) handles open-batch sizes that
+    don't divide its row block (1, 100, 1000 with block_n=8)."""
+    from repro.core import aggregation as agg
+    p = jax.nn.softmax(jax.random.normal(rng, (3, N, 17)), -1)
+    np.testing.assert_allclose(agg.era(p, 0.1, use_kernel=True),
+                               agg.era(p, 0.1), atol=1e-5)
+
+
+def test_era_kernel_interpret_resolution(monkeypatch):
+    """use_kernel=True must not silently interpret off-CPU: the default
+    (interpret=None) resolves to interpret mode on CPU only."""
+    from repro.kernels import era_sharpen as es
+    assert es.resolve_interpret(True) is True
+    assert es.resolve_interpret(False) is False
+    monkeypatch.setattr(es.jax, "default_backend", lambda: "cpu")
+    assert es.resolve_interpret(None) is True
+    monkeypatch.setattr(es.jax, "default_backend", lambda: "tpu")
+    assert es.resolve_interpret(None) is False
+
+
+def test_weighted_era_all_zero_weights_fall_back_to_uniform(rng):
+    """All-zero reliability weights must degrade to plain ERA (uniform
+    weights), not sharpen a zero mean into a uniform teacher."""
+    from repro.core import aggregation as agg
+    p = jax.nn.softmax(jax.random.normal(rng, (4, 8, 10)) * 2, -1)
+    out = agg.weighted_era(p, jnp.zeros((4,)), 0.1)
+    np.testing.assert_allclose(out, agg.era(p, 0.1), atol=1e-5)
+    # and NOT the sharpened-zero-mean (exactly uniform) failure mode
+    assert float(jnp.max(jnp.abs(np.asarray(out) - 1.0 / p.shape[-1]))) > 0.1
+
+
 @pytest.mark.parametrize("N,V,bn,bv", [(32, 128, 8, 32), (64, 1024, 16, 256),
                                        (128, 512, 128, 512), (8, 64, 8, 16)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,74 @@
+"""Property-based tests (hypothesis) for the wire codecs: the TopKCodec
+encode/decode roundtrip invariants over random shapes, k, and inputs —
+the wire-parity counterpart of the LLM comm tests in
+tests/test_llm_algorithms.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import wire
+from repro.core.comm import FLOAT_BYTES, INT_BYTES
+
+SETTINGS = dict(deadline=None, max_examples=30,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def probs_and_k(draw, max_n=6, max_c=12):
+    N = draw(st.integers(1, max_n))
+    C = draw(st.integers(2, max_c))
+    k = draw(st.integers(1, C))
+    seed = draw(st.integers(0, 2**31 - 1))
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (N, C)) * 3
+    return jax.nn.softmax(logits, -1), k
+
+
+@given(probs_and_k())
+@settings(**SETTINGS)
+def test_topk_codec_roundtrip_invariants(pk):
+    p, k = pk
+    C = p.shape[-1]
+    codec = wire.TopKCodec(k=k, n_classes=C)
+    enc = codec.encode(p)
+    out = np.asarray(codec.decode(enc))
+    # decoded payload is a renormalized distribution...
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-5)
+    assert np.all(out >= 0)
+    # ...supported on the true top-k of the input
+    assert np.all((out > 0).sum(-1) <= k)
+    true_topk = np.argsort(-np.asarray(p), axis=-1)[..., :k]
+    kept = np.sort(np.asarray(enc["i"]), -1)
+    assert np.all(kept == np.sort(true_topk, -1))
+    # ...and exact when k == C
+    if k == C:
+        np.testing.assert_allclose(out, np.asarray(p), atol=1e-5)
+
+
+@given(probs_and_k())
+@settings(**SETTINGS)
+def test_topk_codec_payload_bytes_are_k_pairs(pk):
+    p, k = pk
+    N, C = p.shape
+    codec = wire.TopKCodec(k=k, n_classes=C)
+    enc = codec.encode(p)
+    assert jax.tree.leaves(enc["v"])[0].dtype == jnp.float32
+    assert jax.tree.leaves(enc["i"])[0].dtype == jnp.int32
+    assert codec.payload_bytes(enc) == N * k * (FLOAT_BYTES + INT_BYTES)
+
+
+@given(probs_and_k(), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_topk_codec_roundtrip_on_pytrees(pk, depth):
+    """Codecs must map over whole payload pytrees (the upload is a pytree)."""
+    p, k = pk
+    codec = wire.TopKCodec(k=k, n_classes=p.shape[-1])
+    tree = {"a": p}
+    for _ in range(depth):
+        tree = {"nest": tree}
+    out = codec.decode(codec.encode(tree))
+    leaf = jax.tree.leaves(out)[0]
+    np.testing.assert_allclose(np.asarray(leaf).sum(-1), 1.0, atol=1e-5)
