@@ -22,6 +22,7 @@ BENCHES = [
     ("fig7", "benchmarks.noisy_label"),          # noisy labels
     ("fig8", "benchmarks.noisy_open"),           # noisy open data
     ("table4", "benchmarks.poisoning"),          # model poisoning
+    ("ttacc", "benchmarks.time_to_accuracy"),    # sim: acc vs wallclock/bytes
     ("kernels", "benchmarks.kernels_bench"),     # Pallas kernels
     ("roofline", "benchmarks.roofline_report"),  # dry-run roofline table
 ]

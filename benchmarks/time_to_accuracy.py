@@ -1,0 +1,150 @@
+"""Accuracy vs *cumulative upload time* under a heterogeneous device fleet
+(the paper's Figs. 5-8 x-axis, which a round-indexed history cannot give).
+
+Runs DSFL-ERA / DSFL-SA vs FD vs FedAvg through `repro.sim.SimRunner`: a
+lognormal-link `ClientPopulation`, uniform-K partial participation, and a
+virtual clock charged from the *measured* `core.wire` codec bytes — so the
+communication-time efficiency claim is checked on real encoded tensors, not
+the analytic `CommModel` arithmetic (which stays as the cross-check: the
+smoke mode asserts measured uplink bytes match it exactly, and that the
+emitted wallclock/byte series are monotone).
+
+  PYTHONPATH=src python -m benchmarks.time_to_accuracy --smoke   # CI tier
+  PYTHONPATH=src python -m benchmarks.time_to_accuracy           # fuller run
+
+Also registered in benchmarks.run as the ``ttacc`` key.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core.algorithms import (DSFLAlgorithm, FDAlgorithm, FDConfig,
+                                   FedAvgAlgorithm, FedAvgConfig)
+from repro.core.comm import CommModel, fmt_bytes
+from repro.core.engine import FedEngine, make_eval_fn
+from repro.core.protocol import DSFLConfig
+from repro.data.pipeline import build_image_task
+from repro.models.base import param_count
+from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.sim import ClientPopulation, SimRunner, SyncScheduler
+
+
+@dataclass
+class SimCfg:
+    K: int = 8
+    rounds: int = 3
+    local_epochs: int = 1
+    distill_epochs: int = 1
+    batch_size: int = 20
+    open_batch: int = 80
+    n_private: int = 320
+    n_open: int = 80
+    n_test: int = 160
+    lr: float = 0.1
+    fraction: float = 0.5          # partial participation
+    deadline: float | None = None
+    seed: int = 0
+
+
+METHODS = ("dsfl_era", "dsfl_sa", "fd", "fedavg")
+
+
+def build_engine(method: str, task, sc: SimCfg) -> FedEngine:
+    ev = make_eval_fn(apply_tiny_mlp, task.x_test, task.y_test)
+    if method.startswith("dsfl"):
+        hp = DSFLConfig(rounds=sc.rounds, local_epochs=sc.local_epochs,
+                        distill_epochs=sc.distill_epochs,
+                        batch_size=sc.batch_size, open_batch=sc.open_batch,
+                        lr=sc.lr, lr_distill=sc.lr,
+                        aggregation=method.split("_")[1], seed=sc.seed)
+        return FedEngine(DSFLAlgorithm(apply_tiny_mlp, hp), ev)
+    if method == "fd":
+        hp = FDConfig(rounds=sc.rounds, local_epochs=sc.local_epochs,
+                      batch_size=sc.batch_size, lr=sc.lr, gamma=0.1,
+                      n_classes=task.n_classes, seed=sc.seed)
+        return FedEngine(FDAlgorithm(apply_tiny_mlp, hp), ev)
+    if method == "fedavg":
+        hp = FedAvgConfig(rounds=sc.rounds, local_epochs=sc.local_epochs,
+                          batch_size=sc.batch_size, lr=sc.lr, seed=sc.seed)
+        return FedEngine(FedAvgAlgorithm(apply_tiny_mlp, hp), ev)
+    raise ValueError(method)
+
+
+def simulate(method: str, task, sc: SimCfg,
+             pop: ClientPopulation) -> SimRunner:
+    eng = build_engine(method, task, sc)
+    runner = SimRunner(eng, SyncScheduler(pop, fraction=sc.fraction,
+                                          deadline=sc.deadline), seed=sc.seed)
+    state = eng.init(lambda k: init_tiny_mlp(k), task)
+    runner.run(state, task, rounds=sc.rounds)
+    return runner
+
+
+def _assert_series(runner: SimRunner, method: str) -> None:
+    t = np.asarray(runner.history.series("t_cum"))
+    b = np.asarray(runner.history.series("cum_bytes"))
+    assert np.all(np.diff(t) > 0), f"{method}: wallclock not monotone: {t}"
+    assert np.all(np.diff(b) > 0), f"{method}: cum bytes not monotone: {b}"
+
+
+def run(fast: bool = True):
+    """benchmarks.run entry: returns (name, us_per_call, derived) rows."""
+    sc = SimCfg() if fast else SimCfg(K=20, rounds=10, n_private=2000,
+                                      n_open=500, open_batch=500)
+    task = build_image_task(seed=sc.seed, K=sc.K, n_private=sc.n_private,
+                            n_open=sc.n_open, n_test=sc.n_test,
+                            distribution="non_iid")
+    pop = ClientPopulation.lognormal(sc.seed, sc.K, uplink_median=1e5,
+                                     uplink_sigma=1.0)
+    w, s = init_tiny_mlp(jax.random.PRNGKey(0))
+    cm = CommModel(sc.K, task.n_classes, param_count(w) + param_count(s),
+                   min(sc.open_batch, sc.n_open))
+    rows, runners = [], {}
+    for method in METHODS:
+        t0 = time.perf_counter()
+        runner = simulate(method, task, sc, pop)
+        us = (time.perf_counter() - t0) / sc.rounds * 1e6
+        runners[method] = runner
+        _assert_series(runner, method)
+        last = runner.history[-1]
+        rows.append((f"ttacc_{method}", us,
+                     f"acc={last['test_acc']:.3f}@vt={last['t_cum']:.0f}s"
+                     f"/{fmt_bytes(last['cum_bytes'])}"))
+
+    # measured-vs-analytic cross-check: DSFL's per-client uplink beats
+    # FedAvg's by exactly the CommModel Table-1 ratio
+    up_dsfl, _ = runners["dsfl_era"].engine.measured_leg_bytes(
+        runners["dsfl_era"].engine.algo.init(
+            jax.random.PRNGKey(0), lambda k: init_tiny_mlp(k), task), task)
+    up_fa, _ = runners["fedavg"].engine.measured_leg_bytes(
+        runners["fedavg"].engine.algo.init(
+            jax.random.PRNGKey(0), lambda k: init_tiny_mlp(k), task), task)
+    assert up_dsfl * (sc.K + 1) == cm.dsfl_round(), "DSFL measured != analytic"
+    assert up_fa * (sc.K + 1) == cm.fl_round(), "FedAvg measured != analytic"
+    assert up_dsfl < up_fa, "DSFL uplink should be below FedAvg's"
+    rows.append(("ttacc_uplink_ratio", 0.0,
+                 f"fedavg/dsfl={up_fa / up_dsfl:.1f}x(=CommModel ratio "
+                 f"{cm.fl_round() / cm.dsfl_round():.1f}x)"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: tiny MLP, 8 clients, 3 rounds")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(fast=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,17 +42,55 @@ def era(local_probs: jax.Array, temperature: float = 0.1,
     return jax.nn.softmax(mean / temperature, axis=-1)
 
 
+def _normalize_weights(weights: jax.Array) -> jax.Array:
+    """(K,) nonneg -> normalized; an all-zero vector falls back to uniform
+    explicitly instead of silently producing a zero mean."""
+    w = weights.astype(F32)
+    total = jnp.sum(w)
+    uniform = jnp.full_like(w, 1.0 / w.shape[0])
+    return jnp.where(total > 0, w / jnp.maximum(total, 1e-9), uniform)
+
+
+def weighted_sa(local_probs: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted simple aggregation: the SA mean restricted to (or biased
+    toward) the clients with nonzero weight.  Absent clients (weight 0)
+    contribute exactly nothing — `sum(0 * p) == sum()` bitwise for the
+    finite probability tensors crossing the wire."""
+    w = _normalize_weights(weights)
+    return jnp.einsum("k,k...->...", w, local_probs.astype(F32))
+
+
 def weighted_era(local_probs: jax.Array, weights: jax.Array,
                  temperature: float = 0.1) -> jax.Array:
     """Reliability-weighted ERA. weights: (K,) nonneg, normalized here.
     An all-zero weight vector falls back to uniform weights explicitly
     (== plain ERA) instead of silently sharpening a zero mean."""
-    w = weights.astype(F32)
-    total = jnp.sum(w)
-    uniform = jnp.full_like(w, 1.0 / w.shape[0])
-    w = jnp.where(total > 0, w / jnp.maximum(total, 1e-9), uniform)
-    mean = jnp.einsum("k,k...->...", w, local_probs.astype(F32))
+    mean = weighted_sa(local_probs, weights)
     return jax.nn.softmax(mean / temperature, axis=-1)
+
+
+def participation_weights(mask: jax.Array, staleness: jax.Array | None = None,
+                          decay: float = 1.0,
+                          base: jax.Array | None = None) -> jax.Array:
+    """Per-client aggregation weights for a partial-participation round.
+
+    mask: (K,) 0/1 participation (absent clients get exactly zero weight);
+    staleness: (K,) rounds since each participant last synced its global
+    labels — decayed as ``decay**staleness`` (FedAsync-style staleness
+    discount); base: (K,) reliability/base weights to modulate.  Fully
+    vectorized (no per-client Python loop), jit/mesh-compatible; feed the
+    result to ``weighted_era``/``weighted_sa``/``weighted_average``.
+
+    If every participant decays/modulates to exactly zero (e.g.
+    ``decay=0`` with an all-stale cohort), the result falls back to the
+    raw mask — uniform over participants, still zero for absent clients —
+    so a downstream normalizing average never divides by a zero total."""
+    w = mask.astype(F32)
+    if base is not None:
+        w = w * base.astype(F32)
+    if staleness is not None:
+        w = w * jnp.power(jnp.asarray(decay, F32), staleness.astype(F32))
+    return jnp.where(jnp.sum(w) > 0, w, mask.astype(F32))
 
 
 def aggregate(local_probs: jax.Array, method: str = "era",

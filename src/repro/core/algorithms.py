@@ -41,7 +41,8 @@ import jax.numpy as jnp
 
 from ..optim import optimizers as opt_lib
 from . import fd as fd_lib
-from .aggregation import aggregate
+from .aggregation import (aggregate, participation_weights, weighted_era,
+                          weighted_sa)
 from .client import LocalSpec, local_distill, local_update, predict_probs
 from .fedavg import weighted_average
 from .losses import entropy
@@ -86,12 +87,21 @@ class RoundState:
 @_pytree_dataclass
 @dataclass(frozen=True)
 class BatchCtx:
-    """Per-round data context (a single pytree argument to ``round``)."""
+    """Per-round data context (a single pytree argument to ``round``).
+
+    ``mask``/``stale`` are the partial-participation fields the `repro.sim`
+    schedulers fill in: absent clients (mask 0) neither train nor contribute
+    to aggregation that round, and stale contributions (an async client that
+    last synced its global labels ``stale`` aggregations ago) are discounted
+    by the algorithm's ``staleness_decay``.  Left EMPTY, the round is the
+    exact bit-pinned full-participation path."""
     x: Any = EMPTY          # (K, I_k, ...) private inputs
     y: Any = EMPTY          # (K, I_k) private labels
     open_x: Any = EMPTY     # (I_o, ...) the full shared open set
     o_idx: Any = EMPTY      # (n,) this round's open-batch indices o_r
     weights: Any = EMPTY    # (K,) client dataset sizes (FedAvg Eq. 3)
+    mask: Any = EMPTY       # (K,) 0/1 participation this round
+    stale: Any = EMPTY      # (K,) rounds since each client last synced
 
 
 # ------------------------------------------------------------- protocol ------
@@ -118,6 +128,32 @@ def _stack_init(model_init: Callable, key, K: int):
 
 def _first_client(tree):
     return jax.tree.map(lambda a: a[0], tree)
+
+
+def present(slot) -> bool:
+    """Whether an optional BatchCtx slot carries an array (EMPTY is ``()``).
+    A Python-level (trace-time) predicate: ctx pytree structure is static
+    under jit, so the masked and full-participation paths compile
+    separately and the latter stays bit-identical to the seed round."""
+    return not isinstance(slot, tuple)
+
+
+def select_clients(mask, new_tree, old_tree):
+    """Per-leaf ``where`` over the leading client axis: participants take the
+    freshly-computed leaves, absent clients keep their previous state.
+    Vectorized (one fused where per leaf, no per-client Python loop)."""
+    m = mask.astype(bool)
+
+    def sel(n, o):
+        mb = m.reshape((m.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(mb, n, o)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+def masked_mean(values, mask):
+    m = mask.astype(jnp.float32)
+    return jnp.sum(values * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
 # ---------------------------------------------------------------- DS-FL ------
@@ -172,11 +208,18 @@ class DSFLAlgorithm:
         K = ctx.x.shape[0]
         r1, r2, r3, r4 = jax.random.split(rng, 4)
         xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
+        masked = present(ctx.mask)
 
-        # 1. Update
-        wk, sk, ouk, up_loss = jax.vmap(
+        # 1. Update (always computed for the full stack — a fused where keeps
+        # absent clients' state; no per-client Python loop, shards cleanly)
+        wk_n, sk_n, ouk_n, up_loss = jax.vmap(
             lambda w, s, o, xk, yk, rk: local_update(spec_u, w, s, o, xk, yk, rk)
         )(wk, sk, ouk, ctx.x, ctx.y, jax.random.split(r1, K))
+        if masked:
+            wk, sk, ouk = select_clients(ctx.mask, (wk_n, sk_n, ouk_n),
+                                         (wk, sk, ouk))
+        else:
+            wk, sk, ouk = wk_n, sk_n, ouk_n
 
         # 2. Prediction (local logits on o_r)
         probs = jax.vmap(lambda w, s: predict_probs(self.apply_fn, w, s, xo)
@@ -187,27 +230,52 @@ class DSFLAlgorithm:
         # 3-5. Upload / Aggregation / Broadcast
         agg_w = self.agg_weights
         if agg_w is None and hp.aggregation == "weighted_era":
-            agg_w = jnp.ones((K,), jnp.float32)     # uniform reliability
-        global_logit = aggregate(probs, hp.aggregation, hp.temperature,
-                                 weights=agg_w)
+            # adaptive reliability (paper §5 "future work"): inverse mean
+            # entropy of each client's uploaded soft labels, re-estimated
+            # every round — diffuse (unreliable) uploads get down-weighted
+            ent_k = jnp.mean(entropy(probs), axis=-1)           # (K,)
+            agg_w = 1.0 / (ent_k + 1e-3)
+        if masked:
+            pw = participation_weights(
+                ctx.mask, ctx.stale if present(ctx.stale) else None,
+                hp.staleness_decay, base=agg_w)
+            global_logit = (weighted_sa(probs, pw) if hp.aggregation == "sa"
+                            else weighted_era(probs, pw, hp.temperature))
+        else:
+            pw = agg_w
+            global_logit = aggregate(probs, hp.aggregation, hp.temperature,
+                                     weights=agg_w)
         sa_entropy = jnp.mean(entropy(jnp.mean(probs, axis=0)))
         g_entropy = jnp.mean(entropy(global_logit))
 
-        # 6. Distillation (clients, Eq. 10)
-        wk, sk, odk, d_loss = jax.vmap(
+        # 6. Distillation (clients, Eq. 10; absent clients keep their state)
+        wk_n, sk_n, odk_n, d_loss = jax.vmap(
             lambda w, s, o, rk: local_distill(spec_d, w, s, o, xo,
                                               global_logit, rk)
         )(wk, sk, odk, jax.random.split(r2, K))
+        if masked:
+            wk, sk, odk = select_clients(ctx.mask, (wk_n, sk_n, odk_n),
+                                         (wk, sk, odk))
+        else:
+            wk, sk, odk = wk_n, sk_n, odk_n
 
         # 6'. server global model (Eq. 11), with its own key r4
         wg, sg, odg, gd_loss = local_distill(spec_d, wg, sg, odg, xo,
                                              global_logit, r4)
 
-        metrics = {"update_loss": jnp.mean(up_loss),
-                   "distill_loss": jnp.mean(d_loss),
+        metrics = {"update_loss": (masked_mean(up_loss, ctx.mask) if masked
+                                   else jnp.mean(up_loss)),
+                   "distill_loss": (masked_mean(d_loss, ctx.mask) if masked
+                                    else jnp.mean(d_loss)),
                    "server_distill_loss": gd_loss,
                    "global_entropy": g_entropy,
                    "sa_entropy": sa_entropy}
+        if pw is not None:
+            # normalized per-client aggregation weights (non-scalar: exposed
+            # on `FedEngine.last_metrics`, kept out of the scalar history)
+            metrics["agg_weights"] = pw / jnp.maximum(jnp.sum(pw), 1e-9)
+        if masked:
+            metrics["participants"] = jnp.sum(ctx.mask.astype(jnp.float32))
         new = RoundState(
             clients=ClientState(wk, sk, ouk, odk),
             server=ServerState(wg, sg, odg))
@@ -267,10 +335,14 @@ class FDAlgorithm:
         wk, sk = state.clients.params, state.clients.model_state
         ok = state.clients.opt_update
         K = ctx.x.shape[0]
-        tk, present = jax.vmap(
+        masked = present(ctx.mask)
+        tk, owns = jax.vmap(
             lambda w, s, xk, yk: fd_lib.per_label_logits(
                 self.apply_fn, w, s, xk, yk, hp.n_classes))(wk, sk, ctx.x, ctx.y)
-        tg, n_own = fd_lib.aggregate_fd(tk, present)
+        if masked:
+            # absent clients' per-class tables leave the Eq. 5 mean entirely
+            owns = jnp.logical_and(owns, ctx.mask.astype(bool)[:, None])
+        tg, n_own = fd_lib.aggregate_fd(tk, owns)
         rngs = jax.random.split(rng, K)
 
         def per_client(w, s, o, xk, yk, tkk, rk):
@@ -278,9 +350,15 @@ class FDAlgorithm:
             return local_update(spec, w, s, o, xk, yk, rk,
                                 distill_extra=tgt, gamma=hp.gamma)
 
-        wk, sk, ok, losses = jax.vmap(per_client)(wk, sk, ok, ctx.x, ctx.y,
-                                                  tk, rngs)
-        metrics = {"update_loss": jnp.mean(losses),
+        wk_n, sk_n, ok_n, losses = jax.vmap(per_client)(wk, sk, ok, ctx.x,
+                                                        ctx.y, tk, rngs)
+        if masked:
+            wk, sk, ok = select_clients(ctx.mask, (wk_n, sk_n, ok_n),
+                                        (wk, sk, ok))
+        else:
+            wk, sk, ok = wk_n, sk_n, ok_n
+        metrics = {"update_loss": (masked_mean(losses, ctx.mask) if masked
+                                   else jnp.mean(losses)),
                    "global_logit": tg}        # (C, C), for Fig. 2 analysis
         return RoundState(clients=ClientState(wk, sk, ok)), metrics
 
@@ -306,6 +384,7 @@ class FedAvgConfig:
     batch_size: int = 100
     lr: float = 0.1
     optimizer: str = "sgd"
+    staleness_decay: float = 0.5    # async: weight factor per round of lag
     seed: int = 0
 
 
@@ -344,9 +423,21 @@ class FedAvgAlgorithm:
         wk, sk, _, losses = jax.vmap(per_client)(ctx.x, ctx.y, rngs)
         weights = (jnp.ones((K,), jnp.float32)
                    if isinstance(ctx.weights, tuple) else ctx.weights)
+        masked = present(ctx.mask)
+        if masked:
+            # absent clients carry exactly zero weight in the Eq. 3 average
+            # (client state is ephemeral in FedAvg, so masking the average IS
+            # the partial-participation round); stale async contributions are
+            # discounted FedAsync-style
+            weights = participation_weights(
+                ctx.mask, ctx.stale if present(ctx.stale) else None,
+                self.hp.staleness_decay, base=weights)
         new_w0 = weighted_average(wk, weights)
         new_s0 = weighted_average(sk, weights)
-        metrics = {"update_loss": jnp.mean(losses)}
+        metrics = {"update_loss": (masked_mean(losses, ctx.mask) if masked
+                                   else jnp.mean(losses))}
+        if masked:
+            metrics["participants"] = jnp.sum(ctx.mask.astype(jnp.float32))
         return RoundState(server=ServerState(new_w0, new_s0)), metrics
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):

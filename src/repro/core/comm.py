@@ -18,6 +18,7 @@ from dataclasses import dataclass
 FLOAT_BYTES = 4
 HALF_BYTES = 2
 INT_BYTES = 4
+INT8_BYTES = 1
 
 
 @dataclass(frozen=True)
@@ -49,6 +50,13 @@ class CommModel:
         payload = self.open_batch * self.n_classes * HALF_BYTES
         return payload * (self.n_clients + 1)
 
+    def dsfl_int8_round(self) -> int:
+        """Beyond-paper affine-quantized logit exchange: 1 byte per logit
+        plus the per-tensor (scale, zero) fp32 sidecar (`wire.Int8Codec`)."""
+        payload = (self.open_batch * self.n_classes * INT8_BYTES
+                   + 2 * FLOAT_BYTES)
+        return payload * (self.n_clients + 1)
+
     def round_bytes(self, method: str, topk: int | None = None) -> int:
         if method == "fl":
             return self.fl_round()
@@ -60,6 +68,8 @@ class CommModel:
             return self.dsfl_topk_round(topk or 32)
         if method == "dsfl_fp16":
             return self.dsfl_fp16_round()
+        if method == "dsfl_int8":
+            return self.dsfl_int8_round()
         if method == "single":
             return 0
         raise ValueError(method)

@@ -62,6 +62,7 @@ class FedEngine:
     eval_fn: Optional[Callable] = None
     codec: Codec = field(default_factory=DenseF32Codec)
     on_round: Optional[Callable] = None
+    on_ctx: Optional[Callable] = None
     mesh: Optional[Any] = None
     donate_state: bool = False
     history: list = field(default_factory=list)
@@ -122,6 +123,11 @@ class FedEngine:
             o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
                      if self.algo.uses_open else EMPTY)
             ctx = self.make_ctx(data, o_idx=o_idx, weights=weights)
+            if self.on_ctx is not None:
+                # externally-supplied client subsets: a `repro.sim` scheduler
+                # (or any caller) rewrites the ctx — participation mask,
+                # staleness, weights — before the jitted round sees it
+                ctx = self.on_ctx(r, ctx)
             if self._round is None:
                 self._round = self._build_round(state, ctx)
             state, m = self._round(state, ctx, rk)
@@ -139,23 +145,38 @@ class FedEngine:
         return state
 
     # -------------------------------------------------------- comm bytes ----
-    def measured_round_bytes(self, state: RoundState, data,
-                             n_clients: Optional[int] = None) -> int:
-        """Per-round wire bytes of this algorithm under ``self.codec``,
-        measured on the actually-encoded payload pytree (via ``eval_shape``,
-        so it costs no compute): K client uploads + 1 multicast broadcast of
-        the same payload shape — the convention `comm.CommModel` uses."""
-        K = _leading_dim(data.x_clients) if n_clients is None else n_clients
+    def _payload_ctx(self, data) -> BatchCtx:
         if self.algo.uses_open:
             n_r = min(self.algo.hp.open_batch, _leading_dim(data.open_x))
             o_idx = jnp.zeros((n_r,), jnp.int32)
         else:
             o_idx = EMPTY
-        ctx = self.make_ctx(data, o_idx=o_idx)
-        enc = jax.eval_shape(
-            lambda s, c: self.codec.encode(self.algo.upload_payload(s, c)),
+        return self.make_ctx(data, o_idx=o_idx)
+
+    def measured_leg_bytes(self, state: RoundState, data) -> tuple[int, int]:
+        """(uplink bytes per client, downlink broadcast bytes) measured on
+        the actually-encoded payload pytree via ``eval_shape`` (free).  The
+        legs differ under a per-leg `wire.AsymmetricCodec` (sparse upload,
+        dense broadcast); the `repro.sim` clock charges each separately."""
+        ctx = self._payload_ctx(data)
+        up = jax.eval_shape(
+            lambda s, c: self.codec.encode_up(self.algo.upload_payload(s, c)),
             state, ctx)
-        return nbytes(enc) * (K + 1)
+        down = jax.eval_shape(
+            lambda s, c: self.codec.encode_down(self.algo.upload_payload(s, c)),
+            state, ctx)
+        return nbytes(up), nbytes(down)
+
+    def measured_round_bytes(self, state: RoundState, data,
+                             n_clients: Optional[int] = None) -> int:
+        """Per-round wire bytes of this algorithm under ``self.codec``,
+        measured on the actually-encoded payload pytree (via ``eval_shape``,
+        so it costs no compute): K client uploads + 1 multicast broadcast —
+        the convention `comm.CommModel` uses (for symmetric codecs both legs
+        encode identically, so this is payload * (K + 1) exactly)."""
+        K = _leading_dim(data.x_clients) if n_clients is None else n_clients
+        up, down = self.measured_leg_bytes(state, data)
+        return up * K + down
 
     # ------------------------------------------------------- checkpointing --
     def save_state(self, path: str, state: RoundState) -> None:

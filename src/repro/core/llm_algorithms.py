@@ -27,9 +27,20 @@ import jax
 import jax.numpy as jnp
 
 from ..models.base import ModelConfig
-from .algorithms import BatchCtx, ClientState, EMPTY, RoundState
+from .aggregation import participation_weights
+from .algorithms import BatchCtx, ClientState, EMPTY, RoundState, present
 from .llm_dsfl import (LLMDsflHP, dsfl_round_step, fedavg_round_step,
                        predict_open_probs)
+
+
+def _participation(ctx: BatchCtx, decay: float):
+    """(K,) aggregation weights from the sim's mask/stale ctx fields, or
+    None for the exact full-participation path.  Shares the aggregation
+    helper's all-zero fallback (decay 0 + all-stale cohort -> raw mask)."""
+    if not present(ctx.mask):
+        return None
+    return participation_weights(
+        ctx.mask, ctx.stale if present(ctx.stale) else None, decay)
 
 
 def _take_open(open_x, o_idx):
@@ -67,11 +78,16 @@ def _shardings(cfg: ModelConfig, mesh, state: RoundState, ctx: BatchCtx,
                                         client_axis=client_axis))
     st = RoundState(clients=ClientState(params=pshard))
     xsh = to_named(mesh, batch_specs(ctx.x, mesh, client_axis=client_axis))
+    rep = NamedSharding(mesh, P())
+    # the sim's participation fields (tiny (K,) vectors) stay replicated;
+    # mirrored only when present so the ctx treedefs match
+    mask = rep if not isinstance(ctx.mask, tuple) else EMPTY
+    stale = rep if not isinstance(ctx.stale, tuple) else EMPTY
     if with_open:
         osh = to_named(mesh, batch_specs(ctx.open_x, mesh))
-        rep = NamedSharding(mesh, P())
-        return st, BatchCtx(x=xsh, open_x=osh, o_idx=rep)
-    return st, BatchCtx(x=xsh)
+        return st, BatchCtx(x=xsh, open_x=osh, o_idx=rep, mask=mask,
+                            stale=stale)
+    return st, BatchCtx(x=xsh, mask=mask, stale=stale)
 
 
 @dataclass(frozen=True)
@@ -96,8 +112,10 @@ class LLMDSFLAlgorithm:
     def round(self, state: RoundState, ctx: BatchCtx, rng):
         del rng   # dsfl_round_step is deterministic given the batches
         open_b = _take_open(ctx.open_x, ctx.o_idx)
-        new, loss = dsfl_round_step(self.cfg, state.clients.params, ctx.x,
-                                    open_b, self.hp)
+        new, loss = dsfl_round_step(
+            self.cfg, state.clients.params, ctx.x, open_b, self.hp,
+            weights=_participation(ctx, self.hp.staleness_decay),
+            mask=ctx.mask if present(ctx.mask) else None)
         return RoundState(clients=ClientState(params=new)), {"loss": loss}
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):
@@ -118,6 +136,7 @@ class LLMDSFLAlgorithm:
 @dataclass(frozen=True)
 class LLMFedAvgHP:
     lr: float = 1e-4
+    staleness_decay: float = 0.5    # async sim: weight factor per round of lag
     rounds: int = 10
     seed: int = 0
 
@@ -140,8 +159,10 @@ class LLMFedAvgAlgorithm:
 
     def round(self, state: RoundState, ctx: BatchCtx, rng):
         del rng
-        new, loss = fedavg_round_step(self.cfg, state.clients.params, ctx.x,
-                                      self.hp.lr)
+        new, loss = fedavg_round_step(
+            self.cfg, state.clients.params, ctx.x, self.hp.lr,
+            weights=_participation(ctx, self.hp.staleness_decay),
+            mask=ctx.mask if present(ctx.mask) else None)
         return RoundState(clients=ClientState(params=new)), {"loss": loss}
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):

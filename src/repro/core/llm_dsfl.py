@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from ..models.api import model_logits
 from ..models.base import ModelConfig
-from .aggregation import era, sa, topk_compress
+from .aggregation import era, sa, topk_compress, weighted_era, weighted_sa
+from .algorithms import masked_mean, select_clients
 from .losses import distill_xent, topk_distill_xent, xent_int_labels
 
 
@@ -36,6 +37,7 @@ class LLMDsflHP:
     aux_weight: float = 0.01        # MoE load-balance loss
     topk: int | None = None         # sparsified logit exchange (beyond paper)
     microbatches: int = 1           # gradient accumulation (activation peak /m)
+    staleness_decay: float = 0.5    # async sim: weight factor per round of lag
     # engine-facing fields (`FedEngine` reads rounds/seed/open_batch; the
     # round-step functions above ignore them)
     rounds: int = 10
@@ -119,7 +121,7 @@ def predict_open_probs(cfg: ModelConfig, params, open_batch):
 
 
 def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
-                    open_batch, hp: LLMDsflHP):
+                    open_batch, hp: LLMDsflHP, weights=None, mask=None):
     """One full DS-FL round over the pod-sharded client axis.
 
     stacked_params: pytree with leading (n_clients,) axis, sharded P("pod",.).
@@ -131,6 +133,15 @@ def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
     paper's upload leg): the cross-pod traffic becomes an all-gather of
     (value, index) pairs — k*(4+4) bytes/token instead of V*2 — and the
     dense densify+ERA runs pod-locally on the gathered pairs.
+
+    ``weights`` (K,), when given, turns the exchange into the sim layer's
+    partial-participation round: zero-weight (absent) clients contribute
+    nothing to the aggregate and keep their parameters; stale-decayed
+    weights discount async contributions.  ``mask`` (K,) separately names
+    the participants — a stale participant whose aggregation weight
+    decayed to exactly zero still trains and averages into the loss, same
+    as the core `algorithms` path.  ``None`` (the default) is the exact
+    full-participation path the parity tests pin bit-for-bit.
     """
     from ..models.shardctx import constrain
     probs = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
@@ -163,34 +174,67 @@ def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
         onehot = (iota == ti[..., None]).astype(jnp.float32)   # (Kc,B,S,k,V)
         dense = jnp.einsum("cbsk,cbskv->cbsv", tv.astype(jnp.float32), onehot)
         dense = constrain(dense, None, "batch", None, "model")
-        teacher = (era(dense, hp.temperature) if hp.aggregation == "era"
-                   else sa(dense)).astype(jnp.bfloat16)
+        teacher = _aggregate_teacher(dense, hp, weights)
         teacher = constrain(teacher, "batch", None, "model")
         # the exchange leg is compressed; the pod-local distillation uses the
         # dense (vocab-sharded) teacher — no top_k over a sharded axis
         import dataclasses
         hp = dataclasses.replace(hp, topk=None)
-    elif hp.aggregation == "era":
-        teacher = era(probs, hp.temperature).astype(jnp.bfloat16)
     else:
-        teacher = sa(probs).astype(jnp.bfloat16)
+        teacher = _aggregate_teacher(probs, hp, weights)
 
     new_params, losses = jax.vmap(
         lambda p, b: dsfl_client_step(cfg, p, b, open_batch, teacher, hp)
     )(stacked_params, private_batches)
+    if weights is not None:
+        # absent clients neither update nor average into the loss
+        m = (weights if mask is None else mask).astype(jnp.float32) > 0
+        new_params = select_clients(m, new_params, stacked_params)
+        return new_params, masked_mean(losses, m)
     return new_params, jnp.mean(losses)
 
 
+def _aggregate_teacher(probs, hp: LLMDsflHP, weights):
+    """sa/era over the client axis; the weighted variants zero out absent
+    clients and decay stale ones when the sim supplies ``weights``."""
+    if weights is None:
+        agg = era(probs, hp.temperature) if hp.aggregation == "era" \
+            else sa(probs)
+    else:
+        agg = (weighted_era(probs, weights, hp.temperature)
+               if hp.aggregation == "era" else weighted_sa(probs, weights))
+    return agg.astype(jnp.bfloat16)
+
+
 def fedavg_round_step(cfg: ModelConfig, stacked_params, private_batches,
-                      lr: float):
+                      lr: float, weights=None, mask=None):
     """Benchmark 1 at pod scale: local step then parameter mean over the pod
-    axis — its all-reduce bytes = model size (the paper's comparison)."""
+    axis — its all-reduce bytes = model size (the paper's comparison).
+
+    ``weights`` (K,), when given, makes the mean a weighted average (zero
+    for absent clients, staleness-decayed for async ones; client state is
+    ephemeral in FedAvg, so masking the average is the whole
+    partial-participation round); ``mask`` (K,) names the participants
+    whose losses average into the metric even if their weight decayed to
+    zero.  ``None`` is the exact pinned path."""
     new_params, losses = jax.vmap(
         lambda p, b: sgd_train_step(cfg, p, b, lr))(stacked_params,
                                                     private_batches)
-    avg = jax.tree.map(lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0,
-                                             keepdims=True
-                                             ).astype(leaf.dtype), new_params)
+    if weights is None:
+        avg = jax.tree.map(
+            lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0,
+                                  keepdims=True).astype(leaf.dtype),
+            new_params)
+        loss = jnp.mean(losses)
+    else:
+        w = weights.astype(jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1e-9)
+        avg = jax.tree.map(
+            lambda leaf: jnp.einsum("k,k...->...", w,
+                                    leaf.astype(jnp.float32)
+                                    )[None].astype(leaf.dtype), new_params)
+        m = (weights if mask is None else mask).astype(jnp.float32) > 0
+        loss = masked_mean(losses, m)
     broad = jax.tree.map(lambda a, ref: jnp.broadcast_to(a, ref.shape),
                          avg, new_params)
-    return broad, jnp.mean(losses)
+    return broad, loss

@@ -35,6 +35,7 @@ class DSFLConfig:
     optimizer: str = "sgd"
     aggregation: str = "era"        # sa | era | weighted_era
     temperature: float = 0.1        # ERA softmax temperature
+    staleness_decay: float = 0.5    # async: weight factor per round of lag
     seed: int = 0
 
 

@@ -16,7 +16,7 @@ device transfers.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,12 @@ def nbytes(tree) -> int:
 
 @dataclass(frozen=True)
 class Codec:
-    """Base codec: identity framing of float32 leaves ("dense-f32")."""
+    """Base codec: identity framing of float32 leaves ("dense-f32").
+
+    ``encode_up``/``encode_down`` are the per-leg encodings (client upload
+    vs. server multicast broadcast); symmetric codecs alias both to
+    ``encode``, while `AsymmetricCodec` pays each leg differently — the
+    `repro.sim` virtual clock charges uplink and downlink from these."""
     name: str = "dense_f32"
 
     def encode(self, payload):
@@ -42,6 +47,18 @@ class Codec:
 
     def decode(self, encoded):
         return jax.tree.map(lambda a: a.astype(F32), encoded)
+
+    def encode_up(self, payload):
+        return self.encode(payload)
+
+    def encode_down(self, payload):
+        return self.encode(payload)
+
+    def decode_up(self, encoded):
+        return self.decode(encoded)
+
+    def decode_down(self, encoded):
+        return self.decode(encoded)
 
     def payload_bytes(self, encoded) -> int:
         return nbytes(encoded)
@@ -83,7 +100,63 @@ class TopKCodec(Codec):
             encoded, is_leaf=lambda d: isinstance(d, dict) and "v" in d)
 
 
-CODECS = {"dense_f32": DenseF32Codec, "fp16": FP16Codec, "topk": TopKCodec}
+@dataclass(frozen=True)
+class Int8Codec(Codec):
+    """Per-tensor affine int8 quantization: each leaf (any shape) becomes
+    ``{"q": uint8, "scale": f32 scalar, "zero": f32 scalar}`` — 1 byte per
+    logit plus an 8-byte per-tensor (scale, zero) sidecar.  Decode is
+    ``q * scale + zero``; the roundtrip error is bounded by ``scale / 2``
+    with ``scale = (max - min) / 255`` (see tests/test_wire_props.py)."""
+    name: str = "int8"
+
+    def encode(self, payload):
+        def enc(a):
+            a = a.astype(F32)
+            lo, hi = jnp.min(a), jnp.max(a)
+            scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+            q = jnp.clip(jnp.round((a - lo) / scale), 0, 255).astype(jnp.uint8)
+            return {"q": q, "scale": scale.astype(F32), "zero": lo.astype(F32)}
+        return jax.tree.map(enc, payload)
+
+    def decode(self, encoded):
+        return jax.tree.map(
+            lambda d: d["q"].astype(F32) * d["scale"] + d["zero"],
+            encoded, is_leaf=lambda d: isinstance(d, dict) and "q" in d)
+
+
+@dataclass(frozen=True)
+class AsymmetricCodec(Codec):
+    """Per-leg codec (cf. arXiv:2409.17517 hybrid exchanges): a sparse/cheap
+    uplink from each client and a dense broadcast downlink — by default top-k
+    (value, index) pairs up, dense fp16 down.  ``encode``/``decode`` alias
+    the uplink leg (the payload `FedEngine.measured_round_bytes` multiplies
+    by K); the sim clock charges each leg separately via
+    ``measured_leg_bytes``."""
+    name: str = "asym"
+    up: Codec = field(default_factory=TopKCodec)
+    down: Codec = field(default_factory=FP16Codec)
+
+    def encode(self, payload):
+        return self.up.encode(payload)
+
+    def decode(self, encoded):
+        return self.up.decode(encoded)
+
+    def encode_up(self, payload):
+        return self.up.encode(payload)
+
+    def encode_down(self, payload):
+        return self.down.encode(payload)
+
+    def decode_up(self, encoded):
+        return self.up.decode(encoded)
+
+    def decode_down(self, encoded):
+        return self.down.decode(encoded)
+
+
+CODECS = {"dense_f32": DenseF32Codec, "fp16": FP16Codec, "topk": TopKCodec,
+          "int8": Int8Codec, "asym": AsymmetricCodec}
 
 
 def make_codec(name: str, **kw) -> Codec:

@@ -155,6 +155,22 @@ def apply_imdb_lstm(p, s, tokens, train: bool):
     return h @ p["out"]["w"] + p["out"]["b"], s
 
 
+# ---------------------------------------------------------------- tiny MLP ---
+def init_tiny_mlp(key, n_classes=10, image_hw=16, hidden=32):
+    """Beyond-paper micro model for simulation smoke runs: flatten -> dense
+    -> relu -> dense.  Small enough that a 100-client fleet jits in seconds
+    on CPU (see benchmarks/time_to_accuracy.py, examples/sim_stragglers.py)."""
+    k1, k2 = jax.random.split(key)
+    return {"d1": _dense(k1, image_hw * image_hw, hidden),
+            "d2": _dense(k2, hidden, n_classes)}, {}
+
+
+def apply_tiny_mlp(p, s, x, train: bool):
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(h @ p["d1"]["w"] + p["d1"]["b"])
+    return h @ p["d2"]["w"] + p["d2"]["b"], s
+
+
 # ----------------------------------------------------------- Reuters DNN -----
 def init_reuters_dnn(key, vocab=10_000, n_classes=46, widths=(512, 128)):
     ks = jax.random.split(key, 3)
@@ -201,4 +217,7 @@ def make_smallnet(name: str, **kw) -> SmallNet:
     if name == "reuters_dnn":
         return SmallNet("reuters_dnn", functools.partial(init_reuters_dnn, **kw),
                         apply_reuters_dnn, "bow", kw.get("n_classes", 46))
+    if name == "tiny_mlp":
+        return SmallNet("tiny_mlp", functools.partial(init_tiny_mlp, **kw),
+                        apply_tiny_mlp, "image", kw.get("n_classes", 10))
     raise ValueError(name)

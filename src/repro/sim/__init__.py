@@ -1,0 +1,20 @@
+"""`repro.sim` — event-driven federation simulation.
+
+Wraps any `FedAlgorithm`/`FedEngine` pair (no forked training loop) with the
+system effects the paper's time-axis figures need: partial participation,
+heterogeneous link rates, straggler deadlines, buffered-async aggregation
+with staleness-decayed weights, and a virtual clock charged from *measured*
+wire bytes.  See `runner.SimRunner` for the entry point.
+"""
+from .clients import (ClientPopulation, SAMPLERS, sample_available,
+                      sample_uniform)
+from .clock import RoundTiming, VirtualClock
+from .history import SimHistory
+from .runner import SimRunner
+from .scheduler import AsyncBufferScheduler, RoundPlan, SyncScheduler
+
+__all__ = [
+    "AsyncBufferScheduler", "ClientPopulation", "RoundPlan", "RoundTiming",
+    "SAMPLERS", "SimHistory", "SimRunner", "SyncScheduler", "VirtualClock",
+    "sample_available", "sample_uniform",
+]

@@ -1,0 +1,106 @@
+"""Per-client device/link profiles and participation samplers.
+
+The paper's efficiency claim is plotted against *cumulative upload time* on
+heterogeneous mobile devices (Figs. 5-8), so a reproduction needs a model of
+who shows up each round and how slow their link is.  A `ClientPopulation`
+holds vectorized per-client profiles (compute seconds per round, uplink and
+downlink bytes/s, availability); factories draw them from configurable
+distributions — lognormal link rates are the standard mobile-network model.
+
+Everything here is plain NumPy: the sim layer runs at Python level between
+jitted rounds; only the resulting participation mask / staleness vector
+crosses into jit (as `BatchCtx.mask` / ``.stale``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class ClientPopulation:
+    """Vectorized per-client profiles; all arrays are shape (K,)."""
+    compute_time: np.ndarray     # seconds of local work per round
+    uplink: np.ndarray           # bytes/s client -> server
+    downlink: np.ndarray         # bytes/s server -> client
+    availability: np.ndarray     # P(client reachable in a round), in (0, 1]
+
+    def __post_init__(self):
+        for name in ("compute_time", "uplink", "downlink", "availability"):
+            setattr(self, name, np.asarray(getattr(self, name), np.float64))
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.compute_time.shape[0])
+
+    def latency(self, up_bytes: float, down_bytes: float) -> np.ndarray:
+        """(K,) seconds for one round: receive the broadcast, compute, then
+        upload — ``down/downlink + compute + up/uplink`` per client."""
+        return (down_bytes / self.downlink + self.compute_time
+                + up_bytes / self.uplink)
+
+    # ----------------------------------------------------------- factories --
+    @classmethod
+    def uniform(cls, K: int, compute_time: float = 1.0,
+                uplink: float = 1e6, downlink: float = 1e7,
+                availability: float = 1.0) -> "ClientPopulation":
+        """Homogeneous population — the idealized-engine equivalence case."""
+        ones = np.ones(K)
+        return cls(compute_time * ones, uplink * ones, downlink * ones,
+                   availability * ones)
+
+    @classmethod
+    def lognormal(cls, seed: int, K: int, compute_median: float = 1.0,
+                  compute_sigma: float = 0.5, uplink_median: float = 1e6,
+                  uplink_sigma: float = 1.0, downlink_factor: float = 10.0,
+                  availability: tuple[float, float] = (1.0, 1.0)
+                  ) -> "ClientPopulation":
+        """Heterogeneous mobile fleet: lognormal compute and link rates
+        (medians in seconds and bytes/s), downlink a fixed multiple of the
+        uplink (asymmetric consumer links), availability uniform in the
+        given range."""
+        rng = np.random.default_rng(seed)
+        compute = compute_median * rng.lognormal(0.0, compute_sigma, K)
+        up = uplink_median * rng.lognormal(0.0, uplink_sigma, K)
+        avail = rng.uniform(availability[0], availability[1], K)
+        return cls(compute, up, downlink_factor * up, avail)
+
+
+# ------------------------------------------------- participation samplers ----
+def sample_uniform(rng: np.random.Generator, pop: ClientPopulation,
+                   fraction: float = 1.0) -> np.ndarray:
+    """Uniform-K sampling: exactly ``max(1, round(fraction * K))`` clients,
+    chosen uniformly without replacement.  Returns a (K,) bool mask.
+
+    All samplers share the ``(rng, pop, fraction) -> mask`` signature so
+    `SAMPLERS` is a real registry (`SyncScheduler` dispatches by name)."""
+    K = pop.n_clients
+    k = max(1, int(round(fraction * K)))
+    mask = np.zeros(K, bool)
+    mask[rng.choice(K, size=min(k, K), replace=False)] = True
+    return mask
+
+
+def sample_available(rng: np.random.Generator, pop: ClientPopulation,
+                     fraction: float = 1.0) -> np.ndarray:
+    """Availability-weighted sampling: each client is reachable w.p. its
+    availability; among the reachable, up to ``round(fraction * K)`` are
+    selected with probability proportional to availability.  Falls back to
+    the single most-available client if nobody is reachable."""
+    K = pop.n_clients
+    reachable = rng.random(K) < pop.availability
+    if not reachable.any():
+        reachable = np.zeros(K, bool)
+        reachable[int(np.argmax(pop.availability))] = True
+    k = max(1, int(round(fraction * K)))
+    idx = np.flatnonzero(reachable)
+    if len(idx) > k:
+        p = pop.availability[idx] / pop.availability[idx].sum()
+        idx = rng.choice(idx, size=k, replace=False, p=p)
+    mask = np.zeros(K, bool)
+    mask[idx] = True
+    return mask
+
+
+SAMPLERS = {"uniform": sample_uniform, "available": sample_available}

@@ -1,0 +1,186 @@
+"""Round schedulers: who participates, how stale they are, what time it is.
+
+Both schedulers emit a `RoundPlan` per aggregation round — a participation
+mask, per-client staleness, and the virtual-time window — which `SimRunner`
+injects into the jitted round as ``BatchCtx.mask`` / ``.stale`` (the
+aggregation then gives absent clients exactly zero weight and decays stale
+contributions by ``staleness_decay**stale``; see `core.aggregation`).
+
+* `SyncScheduler` — FedAvg-style deadline rounds: sample a cohort, wait for
+  the slowest on-time member (or the straggler deadline).  Late clients are
+  either dropped or admitted into the *next* round with staleness 1+.
+* `AsyncBufferScheduler` — FedBuff-style: every client trains continuously
+  at its own pace; the server aggregates whenever ``buffer_size`` uploads
+  have arrived.  A client that last synced at aggregation j and arrives at
+  aggregation j' contributes with staleness j' - j - 1.
+
+State (virtual clock, pending/arrival arrays, counters) is exposed via
+``state()``/``set_state()`` dicts so a checkpointed simulation resumes on
+the same wallclock axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .clients import SAMPLERS, ClientPopulation
+from .clock import VirtualClock
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """One aggregation round's participation and timing."""
+    mask: np.ndarray           # (K,) bool — whose upload enters aggregation
+    staleness: np.ndarray      # (K,) int — label lag of each contribution
+    t_start: float
+    t_end: float
+    dropped: np.ndarray        # (K,) bool — selected but cut by the deadline
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+    @property
+    def n_participants(self) -> int:
+        return int(self.mask.sum())
+
+
+@dataclass
+class SyncScheduler:
+    """Synchronous deadline rounds over a `ClientPopulation`.
+
+    ``fraction`` of the K clients is sampled each round (``sampler`` is
+    "uniform" or the availability-weighted "available"); ``deadline`` (in
+    virtual seconds) cuts stragglers, which are dropped (``straggler=
+    "drop"``) or admitted late into the next round (``"admit"``) carrying
+    staleness >= 1.  ``idealized`` is True when the configuration can never
+    produce a mask or staleness — `SimRunner` then leaves the BatchCtx
+    untouched and the round is bit-for-bit the plain-engine round."""
+    population: ClientPopulation
+    fraction: float = 1.0
+    deadline: float | None = None
+    straggler: str = "drop"              # drop | admit
+    sampler: str = "uniform"
+    clock: VirtualClock = field(default_factory=VirtualClock)
+    _pending_since: np.ndarray = None    # (K,) agg round a late upload is
+    #                                      from; -1 = no pending upload
+    _round: int = 0
+
+    def __post_init__(self):
+        if self.straggler not in ("drop", "admit"):
+            raise ValueError(self.straggler)
+        if self.sampler not in SAMPLERS:
+            raise ValueError(self.sampler)
+        if self._pending_since is None:
+            self._pending_since = np.full(self.population.n_clients, -1,
+                                          np.int64)
+
+    @property
+    def idealized(self) -> bool:
+        return (self.fraction >= 1.0 and self.deadline is None
+                and (self.sampler == "uniform"
+                     or bool(np.all(self.population.availability >= 1.0))))
+
+    def next_round(self, rng: np.random.Generator, up_bytes: float,
+                   down_bytes: float) -> RoundPlan:
+        pop = self.population
+        t0 = self.clock.now
+        selected = SAMPLERS[self.sampler](rng, pop, self.fraction)
+        timing = self.clock.charge_sync_round(
+            selected, pop.latency(up_bytes, down_bytes), self.deadline)
+
+        pending = self._pending_since >= 0
+        mask = timing.on_time | pending
+        staleness = np.zeros(pop.n_clients, np.int64)
+        staleness[pending] = self._round - self._pending_since[pending]
+        self._pending_since[pending] = -1
+        if self.straggler == "admit":
+            # a late upload was computed from this round's broadcast labels:
+            # it joins the next aggregation at staleness >= 1
+            self._pending_since[timing.dropped] = self._round
+        self._round += 1
+        return RoundPlan(mask, staleness, t0, self.clock.now, timing.dropped)
+
+    # ---------------------------------------------------------- checkpoint --
+    def state(self) -> dict:
+        return {"now": self.clock.now, "round": self._round,
+                "pending_since": self._pending_since.tolist()}
+
+    def set_state(self, s: dict) -> None:
+        self.clock.now = float(s["now"])
+        self._round = int(s["round"])
+        self._pending_since = np.asarray(s["pending_since"], np.int64)
+
+
+@dataclass
+class AsyncBufferScheduler:
+    """Buffered-asynchronous aggregation (FedBuff-style).
+
+    All clients train continuously; client k's upload lands every
+    ``latency_k`` virtual seconds (lognormal jitter ``jitter_sigma`` per
+    leg).  The server aggregates as soon as ``buffer_size`` uploads are
+    buffered; contributors restart from the fresh broadcast, everyone else
+    keeps training on the stale labels they last received — their eventual
+    contribution is decayed by the algorithm's ``staleness_decay``."""
+    population: ClientPopulation
+    buffer_size: int = 2
+    jitter_sigma: float = 0.0
+    clock: VirtualClock = field(default_factory=VirtualClock)
+    _arrival: np.ndarray = None          # (K,) next upload landing time
+    _labels_from: np.ndarray = None      # (K,) label version each client
+    #                                      trains against
+    _round: int = 0
+
+    idealized = False   # masks/staleness are structural in async mode
+
+    def __post_init__(self):
+        K = self.population.n_clients
+        if not 1 <= self.buffer_size <= K:
+            raise ValueError(f"buffer_size {self.buffer_size} not in [1, {K}]")
+        if self._labels_from is None:
+            self._labels_from = np.zeros(K, np.int64)
+
+    def _latency(self, rng, up_bytes, down_bytes) -> np.ndarray:
+        lat = self.population.latency(up_bytes, down_bytes)
+        if self.jitter_sigma > 0:
+            lat = lat * rng.lognormal(0.0, self.jitter_sigma,
+                                      self.population.n_clients)
+        return lat
+
+    def next_round(self, rng: np.random.Generator, up_bytes: float,
+                   down_bytes: float) -> RoundPlan:
+        K = self.population.n_clients
+        if self._arrival is None:        # everyone starts training at t=0
+            self._arrival = self._latency(rng, up_bytes, down_bytes)
+        t0 = self.clock.now
+        order = np.argsort(self._arrival, kind="stable")
+        idx = order[:self.buffer_size]
+        t_agg = float(self._arrival[idx].max())
+        self.clock.advance(max(0.0, t_agg - t0))
+
+        mask = np.zeros(K, bool)
+        mask[idx] = True
+        staleness = np.zeros(K, np.int64)
+        staleness[idx] = self._round - self._labels_from[idx]
+        # contributors restart from the fresh broadcast (label version r+1)
+        self._labels_from[idx] = self._round + 1
+        self._arrival[idx] = (self.clock.now
+                              + self._latency(rng, up_bytes, down_bytes)[idx])
+        self._round += 1
+        return RoundPlan(mask, staleness, t0, self.clock.now,
+                         np.zeros(K, bool))
+
+    # ---------------------------------------------------------- checkpoint --
+    def state(self) -> dict:
+        return {"now": self.clock.now, "round": self._round,
+                "arrival": (None if self._arrival is None
+                            else self._arrival.tolist()),
+                "labels_from": self._labels_from.tolist()}
+
+    def set_state(self, s: dict) -> None:
+        self.clock.now = float(s["now"])
+        self._round = int(s["round"])
+        self._arrival = (None if s["arrival"] is None
+                         else np.asarray(s["arrival"], np.float64))
+        self._labels_from = np.asarray(s["labels_from"], np.int64)

@@ -119,6 +119,42 @@ def test_on_round_hook_can_rewrite_state(task, rng):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ------------------------------------------------- adaptive weighted-ERA ----
+def test_weighted_era_learns_to_downweight_label_flipped_client(task,
+                                                                client_params):
+    """agg_weights=None + aggregation="weighted_era" re-estimates the
+    reliability weights every round from the inverse entropy of each
+    client's uploaded soft labels (ROADMAP open item, paper §5 "future
+    work"): a label-flipped attacker — whose flipped supervision on non-IID
+    shards yields wrong *and* diffuse open-set predictions — must end up
+    below every honest client, where the old static vector stayed
+    uniform."""
+    import dataclasses
+    wk, sk, wg, sg = client_params
+    C = task.n_classes
+
+    def corrupt(probs, xo, rng):
+        flipped = jnp.roll(probs[0], 1, axis=-1)     # class-permuted ...
+        attacked = 0.5 * flipped + 0.5 / C           # ... and diffuse
+        return probs.at[0].set(attacked)
+
+    hp = dataclasses.replace(HP, aggregation="weighted_era")
+    algo = DSFLAlgorithm(apply_mnist_cnn, hp, corrupt=corrupt)
+    eng = FedEngine(algo)
+    eng.run(algo.init_from(wk, sk, wg, sg), task, rounds=2)
+    w = np.asarray(eng.last_metrics["agg_weights"])
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+    assert w[0] < w[1:].min(), w
+
+    # a static agg_weights vector still short-circuits the adaptation
+    static = DSFLAlgorithm(apply_mnist_cnn, hp, corrupt=corrupt,
+                           agg_weights=jnp.ones((K,)))
+    eng2 = FedEngine(static)
+    eng2.run(static.init_from(wk, sk, wg, sg), task, rounds=1)
+    w2 = np.asarray(eng2.last_metrics["agg_weights"])
+    np.testing.assert_allclose(w2, np.full(K, 1 / K), atol=1e-6)
+
+
 # ------------------------------------------------------------ checkpointing --
 def test_state_checkpoint_roundtrip(task, client_params, tmp_path):
     wk, sk, wg, sg = client_params

@@ -1,0 +1,267 @@
+"""`repro.sim`: population/clock/scheduler unit behaviour, golden parity of
+`SimRunner` against the plain engine under an idealized scheduler, masked
+round semantics (absent clients untouched), and checkpoint/resume of the
+virtual clock."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import DSFLAlgorithm, FedAvgAlgorithm, FedAvgConfig
+from repro.core.engine import FedEngine, make_eval_fn
+from repro.core.protocol import DSFLConfig
+from repro.data.pipeline import build_image_task
+from repro.sim import (AsyncBufferScheduler, ClientPopulation, SimRunner,
+                       SyncScheduler, VirtualClock, sample_available,
+                       sample_uniform)
+from repro.models.smallnets import apply_mnist_cnn, init_mnist_cnn
+
+K = 4
+
+
+def _init(k):
+    return init_mnist_cnn(k, image_hw=16, widths=(8, 16), fc=32)
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_image_task(seed=0, K=K, n_private=320, n_open=160,
+                            n_test=160, distribution="non_iid")
+
+
+HP = DSFLConfig(rounds=2, local_epochs=1, distill_epochs=1, batch_size=40,
+                open_batch=80, aggregation="era")
+
+
+def _pop(latencies):
+    """Population with unit links so latency == compute_time + up + down."""
+    lat = np.asarray(latencies, float)
+    inf = np.full_like(lat, np.inf)
+    return ClientPopulation(lat, inf, inf, np.ones_like(lat))
+
+
+# ------------------------------------------------------ population & clock ---
+def test_latency_charges_all_three_legs():
+    pop = ClientPopulation.uniform(3, compute_time=2.0, uplink=10.0,
+                                   downlink=100.0)
+    lat = pop.latency(up_bytes=50, down_bytes=200)
+    np.testing.assert_allclose(lat, 200 / 100 + 2.0 + 50 / 10)
+
+
+def test_lognormal_population_shapes_and_downlink_factor():
+    pop = ClientPopulation.lognormal(0, 16, downlink_factor=7.0)
+    assert pop.n_clients == 16
+    np.testing.assert_allclose(pop.downlink, 7.0 * pop.uplink)
+    assert np.all(pop.availability == 1.0)
+
+
+def test_clock_refuses_to_run_backwards():
+    with pytest.raises(ValueError):
+        VirtualClock().advance(-1.0)
+
+
+def test_sample_uniform_exact_cohort_size():
+    rng = np.random.default_rng(0)
+    pop = ClientPopulation.uniform(8)
+    for frac, want in [(1.0, 8), (0.5, 4), (0.01, 1)]:
+        mask = sample_uniform(rng, pop, frac)
+        assert mask.sum() == want
+
+
+def test_sample_available_falls_back_to_most_available():
+    pop = ClientPopulation.uniform(3, availability=1e-12)
+    pop.availability = np.array([1e-12, 1e-12, 2e-12])
+    mask = sample_available(np.random.default_rng(0), pop)
+    assert mask.sum() == 1 and mask[2]
+
+
+# ---------------------------------------------------------------- schedulers -
+def test_sync_round_waits_for_slowest_without_deadline():
+    sched = SyncScheduler(_pop([1.0, 5.0, 2.0]))
+    plan = sched.next_round(np.random.default_rng(0), 0, 0)
+    assert plan.mask.all() and plan.duration == 5.0
+    assert plan.staleness.sum() == 0 and not plan.dropped.any()
+    assert sched.idealized
+
+
+def test_sync_deadline_drops_stragglers():
+    sched = SyncScheduler(_pop([1.0, 5.0, 2.0]), deadline=3.0)
+    plan = sched.next_round(np.random.default_rng(0), 0, 0)
+    np.testing.assert_array_equal(plan.mask, [True, False, True])
+    np.testing.assert_array_equal(plan.dropped, [False, True, False])
+    assert plan.duration == 3.0 and not sched.idealized
+
+
+def test_sync_admit_late_joins_next_round_stale():
+    sched = SyncScheduler(_pop([1.0, 5.0, 2.0]), deadline=3.0,
+                          straggler="admit")
+    first = sched.next_round(np.random.default_rng(0), 0, 0)
+    assert not first.mask[1]
+    second = sched.next_round(np.random.default_rng(1), 0, 0)
+    assert second.mask[1] and second.staleness[1] == 1
+    third = sched.next_round(np.random.default_rng(2), 0, 0)
+    assert third.staleness[1] == 1        # re-dropped, re-admitted — not 2
+
+
+def test_sync_all_past_deadline_keeps_fastest():
+    sched = SyncScheduler(_pop([9.0, 5.0, 7.0]), deadline=1.0)
+    plan = sched.next_round(np.random.default_rng(0), 0, 0)
+    np.testing.assert_array_equal(plan.mask, [False, True, False])
+    assert plan.duration == 5.0           # closed at the forced-kept client
+
+
+def test_async_buffer_aggregates_m_earliest():
+    sched = AsyncBufferScheduler(_pop([1.0, 10.0, 1.0]), buffer_size=2)
+    p1 = sched.next_round(np.random.default_rng(0), 0, 0)
+    np.testing.assert_array_equal(p1.mask, [True, False, True])
+    assert p1.t_end == 1.0 and p1.staleness.sum() == 0
+    # the fast pair laps the slow client, always freshly synced (their
+    # labels come from the immediately-preceding aggregation: staleness 0)
+    p2 = sched.next_round(np.random.default_rng(1), 0, 0)
+    np.testing.assert_array_equal(p2.mask, [True, False, True])
+    assert p2.t_end == 2.0 and list(p2.staleness[p2.mask]) == [0, 0]
+    assert not sched.idealized
+
+
+def test_async_slow_client_eventually_lands_with_large_staleness():
+    sched = AsyncBufferScheduler(_pop([1.0, 3.5, 1.0]), buffer_size=2)
+    stale_of_1 = []
+    for r in range(4):
+        plan = sched.next_round(np.random.default_rng(r), 0, 0)
+        if plan.mask[1]:
+            stale_of_1.append(int(plan.staleness[1]))
+    assert stale_of_1 and stale_of_1[0] >= 2
+
+
+# ------------------------------------------------------------ golden parity --
+def test_idealized_simrunner_is_bitwise_identical_to_engine(task):
+    """participation 1.0, no stragglers, uniform links: every SimRunner
+    round must be the plain FedEngine round bit-for-bit (state and
+    metrics), with the wallclock/byte ledger riding alongside."""
+    algo = DSFLAlgorithm(apply_mnist_cnn, HP)
+    ev = make_eval_fn(apply_mnist_cnn, task.x_test, task.y_test)
+
+    plain = FedEngine(algo, ev)
+    s0 = plain.run(plain.init(_init, task), task, rounds=2)
+
+    eng = FedEngine(algo, ev)
+    runner = SimRunner(eng, SyncScheduler(ClientPopulation.uniform(K)))
+    s1 = runner.run(eng.init(_init, task), task, rounds=2)
+
+    assert runner.scheduler.idealized
+    assert plain.history == eng.history
+    for a, b in zip(jax.tree.leaves(s0), jax.tree.leaves(s1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(runner.history) == 2
+    t = runner.history.series("t_cum")
+    assert t[1] > t[0] > 0
+    up, down = eng.measured_leg_bytes(s1, task)
+    assert runner.history[0]["cum_bytes"] == up * K + down
+
+
+def test_masked_round_leaves_absent_clients_untouched(task):
+    """mask [1,0,1,1]: client 1 must neither update nor distill — its
+    params, model state and optimizer slots stay bitwise identical."""
+    algo = DSFLAlgorithm(apply_mnist_cnn, HP)
+    eng = FedEngine(algo)
+    mask = jnp.array([1.0, 0.0, 1.0, 1.0])
+    eng.on_ctx = lambda r, ctx: dataclasses.replace(ctx, mask=mask)
+    state0 = eng.init(_init, task)
+    state1 = eng.run(state0, task, rounds=1)
+    for a, b in zip(jax.tree.leaves(state0.clients),
+                    jax.tree.leaves(state1.clients)):
+        np.testing.assert_array_equal(np.asarray(a)[1], np.asarray(b)[1])
+    for a, b in zip(jax.tree.leaves(state0.clients.params),
+                    jax.tree.leaves(state1.clients.params)):
+        assert not np.array_equal(np.asarray(a)[0], np.asarray(b)[0])
+    assert float(eng.last_metrics["participants"]) == 3.0
+    # absent client got exactly zero aggregation weight
+    assert float(eng.last_metrics["agg_weights"][1]) == 0.0
+
+
+def test_masked_fedavg_average_ignores_absent_clients(task):
+    """A participation mask must act exactly like zeroing those clients'
+    Eq. 3 weights (the already-tested weights path), and differ from the
+    full-participation average."""
+    algo = FedAvgAlgorithm(apply_mnist_cnn,
+                           FedAvgConfig(rounds=1, local_epochs=1,
+                                        batch_size=40))
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+
+    eng = FedEngine(algo)
+    eng.on_ctx = lambda r, ctx: dataclasses.replace(ctx, mask=mask)
+    masked = eng.run(algo.init_from(*_init(jax.random.PRNGKey(7))), task,
+                     rounds=1)
+
+    eng2 = FedEngine(algo)
+    zeroed = eng2.run(algo.init_from(*_init(jax.random.PRNGKey(7))), task,
+                      rounds=1, weights=mask)
+    for a, b in zip(jax.tree.leaves(masked.server),
+                    jax.tree.leaves(zeroed.server)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    eng3 = FedEngine(algo)
+    full = eng3.run(algo.init_from(*_init(jax.random.PRNGKey(7))), task,
+                    rounds=1)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(masked.server),
+                               jax.tree.leaves(full.server)))
+
+
+def test_masked_fedavg_all_stale_zero_decay_stays_finite(task):
+    """staleness_decay=0 + an all-stale cohort decays every participant's
+    weight to zero; `participation_weights` must fall back to the raw mask
+    (uniform over participants) instead of letting the Eq. 3 average divide
+    by a zero total and NaN the global model."""
+    algo = FedAvgAlgorithm(apply_mnist_cnn,
+                           FedAvgConfig(rounds=1, local_epochs=1,
+                                        batch_size=40, staleness_decay=0.0))
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+    stale = jnp.array([2, 1, 0, 0], jnp.int32)
+    eng = FedEngine(algo)
+    eng.on_ctx = lambda r, ctx: dataclasses.replace(ctx, mask=mask,
+                                                    stale=stale)
+    out = eng.run(algo.init_from(*_init(jax.random.PRNGKey(7))), task,
+                  rounds=1)
+    for leaf in jax.tree.leaves(out.server):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# -------------------------------------------------------- checkpoint/resume --
+def _make_runner(task, tmp_seed=0):
+    algo = DSFLAlgorithm(apply_mnist_cnn, HP)
+    eng = FedEngine(algo)
+    pop = ClientPopulation.lognormal(3, K, compute_sigma=0.8)
+    sched = SyncScheduler(pop, fraction=0.5, deadline=4.0, straggler="admit")
+    return SimRunner(eng, sched, seed=tmp_seed)
+
+
+def test_simrunner_checkpoint_roundtrip_preserves_virtual_clock(task,
+                                                                tmp_path):
+    full = _make_runner(task)
+    sf = full.run(full.engine.init(_init, task), task, rounds=4)
+
+    first = _make_runner(task)
+    mid = first.run(first.engine.init(_init, task), task, rounds=2)
+    path = os.path.join(tmp_path, "sim.msgpack")
+    first.save_state(path, mid)
+    assert os.path.exists(path + ".sim.json")
+
+    second = _make_runner(task)
+    algo = second.engine.algo
+    restored = second.load_state(path, algo.init(jax.random.PRNGKey(0),
+                                                 _init, task))
+    assert second.scheduler.clock.now == first.scheduler.clock.now
+    assert second.cum_bytes == first.cum_bytes
+    sr = second.run(restored, task, rounds=2)
+
+    assert [h["t_cum"] for h in second.history] == \
+        [h["t_cum"] for h in full.history]
+    assert [h["participants"] for h in second.history] == \
+        [h["participants"] for h in full.history]
+    assert second.cum_bytes == full.cum_bytes
+    for a, b in zip(jax.tree.leaves(sf), jax.tree.leaves(sr)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the simulation layer's core
+invariants: a participation mask must be *exactly* equivalent to deleting
+the masked-out clients' uploads before aggregation, staleness decay must
+only ever shrink weights, and the sync scheduler's virtual-time accounting
+must close the round at the slowest surviving client (or the deadline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.sim import ClientPopulation, SyncScheduler
+
+SETTINGS = dict(deadline=None, max_examples=30,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def probs_and_mask(draw, max_k=8, max_n=5, max_c=8):
+    K = draw(st.integers(2, max_k))
+    N = draw(st.integers(1, max_n))
+    C = draw(st.integers(2, max_c))
+    seed = draw(st.integers(0, 2**31 - 1))
+    mask = np.array(draw(st.lists(st.booleans(), min_size=K, max_size=K)))
+    if not mask.any():
+        mask[draw(st.integers(0, K - 1))] = True
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (K, N, C)) * 3
+    return jax.nn.softmax(logits, -1), mask
+
+
+@given(probs_and_mask(), st.sampled_from(["era", "sa"]))
+@settings(**SETTINGS)
+def test_mask_identical_to_deleting_uploads(pm, method):
+    """Zero-weight clients contribute exactly nothing: aggregating the full
+    (K, n, C) stack under a participation mask equals aggregating only the
+    participants' uploads — bitwise, not approximately."""
+    p, mask = pm
+    w = agg.participation_weights(jnp.asarray(mask, jnp.float32))
+    sub = p[np.flatnonzero(mask)]
+    ones = jnp.ones((sub.shape[0],), jnp.float32)
+    if method == "era":
+        full_agg = agg.weighted_era(p, w, 0.1)
+        sub_agg = agg.weighted_era(sub, ones, 0.1)
+    else:
+        full_agg = agg.weighted_sa(p, w)
+        sub_agg = agg.weighted_sa(sub, ones)
+    np.testing.assert_array_equal(np.asarray(full_agg), np.asarray(sub_agg))
+
+
+@given(probs_and_mask(), st.floats(0.1, 1.0),
+       st.integers(0, 5), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_staleness_decay_only_shrinks_weights(pm, decay, max_stale, seed):
+    _, mask = pm
+    K = mask.shape[0]
+    stale = jax.random.randint(jax.random.PRNGKey(seed), (K,), 0,
+                               max_stale + 1)
+    m = jnp.asarray(mask, jnp.float32)
+    w = agg.participation_weights(m, stale, decay)
+    assert np.all(np.asarray(w) <= np.asarray(m) + 1e-9)
+    assert np.all(np.asarray(w)[~mask] == 0.0)
+    # decay == 1.0 is exactly "staleness ignored"
+    np.testing.assert_array_equal(
+        np.asarray(agg.participation_weights(m, stale, 1.0)), np.asarray(m))
+    # decay == 0 with an all-stale cohort would zero every participant:
+    # the fallback returns the raw mask so a downstream normalizing
+    # average never divides by a zero total
+    all_stale = jnp.ones_like(m, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(agg.participation_weights(m, all_stale, 0.0)),
+        np.asarray(m))
+
+
+@st.composite
+def latencies_and_deadline(draw, max_k=10):
+    K = draw(st.integers(2, max_k))
+    lat = draw(st.lists(st.floats(0.1, 100.0), min_size=K, max_size=K))
+    deadline = draw(st.one_of(st.none(), st.floats(0.5, 120.0)))
+    return np.asarray(lat), deadline
+
+
+@given(latencies_and_deadline(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_sync_scheduler_invariants(ld, seed):
+    """Full-participation sync round: the mask is exactly the on-deadline
+    cohort (never empty), dropped == selected minus mask, and the round
+    closes at max(surviving latency) capped by the deadline."""
+    lat, deadline = ld
+    inf = np.full_like(lat, np.inf)
+    pop = ClientPopulation(lat, inf, inf, np.ones_like(lat))
+    sched = SyncScheduler(pop, deadline=deadline)
+    plan = sched.next_round(np.random.default_rng(seed), 0, 0)
+    assert plan.mask.any()
+    assert not (plan.mask & plan.dropped).any()
+    assert plan.t_end >= plan.t_start
+    if deadline is None:
+        assert plan.mask.all() and not plan.dropped.any()
+        assert np.isclose(plan.duration, lat.max())
+    elif (lat <= deadline).any():
+        np.testing.assert_array_equal(plan.mask, lat <= deadline)
+        assert np.isclose(plan.duration,
+                          min(deadline, lat[plan.mask].max())
+                          if not plan.dropped.any() else deadline)
+    else:
+        # everyone missed: the single fastest client is force-kept
+        assert plan.mask.sum() == 1 and plan.mask[np.argmin(lat)]
+        assert np.isclose(plan.duration, lat.min())

@@ -64,6 +64,39 @@ def test_topk_decoded_is_renormalized_distribution(probs):
     assert int(np.count_nonzero(np.asarray(out)[0])) <= 3
 
 
+def test_int8_roundtrip_within_half_step(probs):
+    codec = wire.Int8Codec()
+    enc = codec.encode(probs)
+    assert enc["q"].dtype == jnp.uint8
+    out = codec.decode(enc)
+    assert out.dtype == jnp.float32
+    half_step = float(enc["scale"]) / 2
+    assert float(jnp.max(jnp.abs(out - probs))) <= half_step * 1.001
+
+
+def test_asymmetric_codec_legs_differ(probs):
+    codec = wire.AsymmetricCodec(up=wire.TopKCodec(k=3, n_classes=C),
+                                 down=wire.FP16Codec())
+    up = codec.encode_up(probs)
+    down = codec.encode_down(probs)
+    assert codec.payload_bytes(up) == N * 3 * 8       # k (value, index) pairs
+    assert codec.payload_bytes(down) == N * C * 2     # dense fp16 broadcast
+    # encode/decode alias the uplink leg (what K clients each send)
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(up)[0]),
+                                  np.asarray(jax.tree.leaves(
+                                      codec.encode(probs))[0]))
+    # each leg round-trips through its own decode
+    np.testing.assert_allclose(np.asarray(codec.decode_down(down)),
+                               np.asarray(probs), atol=1e-3)
+    assert int(np.count_nonzero(np.asarray(codec.decode_up(up))[0])) <= 3
+
+
+def test_symmetric_codecs_have_equal_legs(probs):
+    for codec in (wire.DenseF32Codec(), wire.FP16Codec(), wire.Int8Codec()):
+        assert wire.nbytes(codec.encode_up(probs)) == \
+            wire.nbytes(codec.encode_down(probs))
+
+
 def test_codecs_encode_whole_pytrees(rng):
     tree = {"a": jax.random.normal(rng, (3, C)),
             "b": [jax.random.normal(rng, (2, 2, C))]}
@@ -83,10 +116,28 @@ def test_measured_equals_analytic_for_every_dsfl_codec(task):
     cm = CommModel(K, C, 0, N)
     cases = [(wire.DenseF32Codec(), cm.dsfl_round()),
              (wire.FP16Codec(), cm.dsfl_fp16_round()),
-             (wire.TopKCodec(k=5, n_classes=C), cm.dsfl_topk_round(5))]
+             (wire.TopKCodec(k=5, n_classes=C), cm.dsfl_topk_round(5)),
+             (wire.Int8Codec(), cm.dsfl_int8_round())]
     for codec, analytic in cases:
         eng = FedEngine(algo, codec=codec)
         assert eng.measured_round_bytes(state, task) == analytic, codec.name
+
+
+def test_measured_leg_bytes_asymmetric(task):
+    """Per-leg accounting: K top-k uplinks + 1 dense fp16 broadcast — each
+    leg equal to its CommModel analytic per-payload number."""
+    hp = DSFLConfig(rounds=1, local_epochs=1, distill_epochs=1, batch_size=40,
+                    open_batch=N)
+    algo = DSFLAlgorithm(apply_mnist_cnn, hp)
+    state = algo.init(jax.random.PRNGKey(0), _init, task)
+    cm = CommModel(K, C, 0, N)
+    codec = wire.AsymmetricCodec(up=wire.TopKCodec(k=5, n_classes=C),
+                                 down=wire.FP16Codec())
+    eng = FedEngine(algo, codec=codec)
+    up, down = eng.measured_leg_bytes(state, task)
+    assert up == cm.dsfl_topk_round(5) // (K + 1)
+    assert down == cm.dsfl_fp16_round() // (K + 1)
+    assert eng.measured_round_bytes(state, task) == up * K + down
 
 
 def test_measured_equals_analytic_fd(task):
@@ -118,5 +169,9 @@ def test_payload_bytes_counts_encoded_not_decoded(probs):
 def test_make_codec_registry():
     assert isinstance(wire.make_codec("dense_f32"), wire.DenseF32Codec)
     assert wire.make_codec("topk", k=7, n_classes=C).k == 7
+    assert isinstance(wire.make_codec("int8"), wire.Int8Codec)
+    asym = wire.make_codec("asym", up=wire.Int8Codec())
+    assert isinstance(asym.up, wire.Int8Codec)
+    assert isinstance(asym.down, wire.FP16Codec)
     with pytest.raises(KeyError):
         wire.make_codec("zstd")

@@ -60,6 +60,43 @@ def test_topk_codec_payload_bytes_are_k_pairs(pk):
     assert codec.payload_bytes(enc) == N * k * (FLOAT_BYTES + INT_BYTES)
 
 
+# ------------------------------------------------------------- Int8Codec ----
+@st.composite
+def tensors(draw, max_n=6, max_c=12):
+    N = draw(st.integers(1, max_n))
+    C = draw(st.integers(1, max_c))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    return jax.random.normal(jax.random.PRNGKey(seed), (N, C)) * scale
+
+
+@given(tensors())
+@settings(**SETTINGS)
+def test_int8_codec_roundtrip_error_bound(x):
+    """Per-tensor affine quantization: the decode error is bounded by half a
+    quantization step, scale = (max - min) / 255."""
+    codec = wire.Int8Codec()
+    enc = codec.encode(x)
+    out = np.asarray(codec.decode(enc))
+    scale = float(enc["scale"])
+    bound = scale / 2 * (1 + 1e-3) + 1e-7
+    assert np.max(np.abs(out - np.asarray(x))) <= bound
+    # the quantized leaf really is one byte per element
+    assert enc["q"].dtype == jnp.uint8
+    assert codec.payload_bytes(enc) == x.size * 1 + 8
+
+
+@given(tensors())
+@settings(**SETTINGS)
+def test_int8_codec_constant_tensor_is_exact(x):
+    """Degenerate range (max == min) must not divide by zero and decodes
+    back to the constant."""
+    codec = wire.Int8Codec()
+    const = jnp.full_like(x, float(x[0, 0]))
+    out = np.asarray(codec.decode(codec.encode(const)))
+    np.testing.assert_allclose(out, np.asarray(const), rtol=1e-6, atol=1e-9)
+
+
 @given(probs_and_k(), st.integers(1, 3))
 @settings(**SETTINGS)
 def test_topk_codec_roundtrip_on_pytrees(pk, depth):
