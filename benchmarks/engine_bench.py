@@ -1,0 +1,138 @@
+"""Engine hot-loop benchmark: per-round wallclock of the Python loop vs the
+compiled `chunk_rounds` lax.scan (chunk 1/8/32), and einsum+softmax vs the
+fused weighted-ERA Pallas kernel — the two hot paths this repo's
+time-to-accuracy claims ride on.
+
+Emits ``BENCH_engine.json`` (cwd) so the perf trajectory is recorded
+per-commit, and returns CSV rows for `benchmarks.run` (key ``engine``).
+
+  PYTHONPATH=src python -m benchmarks.engine_bench --smoke   # CI tier
+  PYTHONPATH=src python -m benchmarks.engine_bench           # fuller run
+
+The smoke tier asserts the headline: scanning 32 rounds per dispatch beats
+the per-round loop on the small-model config, where host overhead (one jit
+dispatch + host RNG split + per-metric float() sync per round) dominates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.algorithms import DSFLAlgorithm
+from repro.core.engine import FedEngine
+from repro.core.protocol import DSFLConfig
+from repro.data.pipeline import build_image_task
+from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+
+CHUNKS = (1, 8, 32)
+OUT_JSON = "BENCH_engine.json"
+
+
+def _block(state):
+    jax.block_until_ready(jax.tree.leaves(state))
+
+
+def bench_loop_vs_scan(fast: bool) -> dict:
+    """Per-round wallclock of run(rounds=R) at chunk_rounds 1/8/32 on the
+    paper-scale tiny-MLP config (the regime the benchmarks actually run,
+    where per-round compute is small and dispatch overhead is visible)."""
+    K, R = (8, 32) if fast else (16, 96)
+    task = build_image_task(seed=0, K=K, n_private=40 * K, n_open=80,
+                            n_test=40, distribution="non_iid")
+    hp = DSFLConfig(rounds=R, local_epochs=1, distill_epochs=1,
+                    batch_size=20, open_batch=40, aggregation="era")
+    algo = DSFLAlgorithm(apply_tiny_mlp, hp)
+    eng = FedEngine(algo)          # shared: jit caches persist across chunks
+
+    out = {}
+    for chunk in CHUNKS:
+        state = eng.init(lambda k: init_tiny_mlp(k), task)
+        # warmup: compile the round / the chunk driver (and the tail chunk)
+        state = eng.run(state, task, rounds=R, chunk_rounds=chunk)
+        _block(state)
+        state = eng.init(lambda k: init_tiny_mlp(k), task)
+        t0 = time.perf_counter()
+        state = eng.run(state, task, rounds=R, chunk_rounds=chunk)
+        _block(state)
+        out[f"chunk{chunk}"] = (time.perf_counter() - t0) / R * 1e6
+    return {"rounds": R, "clients": K, "per_round_us": out,
+            "speedup_vs_loop": {k: out["chunk1"] / v
+                                for k, v in out.items()}}
+
+
+def bench_weighted_era(fast: bool) -> dict:
+    """einsum+softmax vs the fused weighted-ERA kernel on a (K, N, C) logit
+    stack.  On CPU the kernel runs in interpret mode (recorded as such);
+    the compiled comparison is meaningful on TPU/GPU."""
+    K, N, C = (8, 256, 64) if fast else (32, 2048, 256)
+    key = jax.random.PRNGKey(0)
+    p = jax.nn.softmax(jax.random.normal(key, (K, N, C)) * 2, -1)
+    w = jnp.ones((K,)).at[0].set(0.0)
+
+    einsum = jax.jit(lambda p, w: agg.weighted_era(p, w, 0.1))
+    kernel = jax.jit(lambda p, w: agg.weighted_era(p, w, 0.1,
+                                                   use_kernel=True))
+
+    def timeit(fn, n=10):
+        fn(p, w).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(p, w)
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / n * 1e6
+
+    np.testing.assert_allclose(np.asarray(einsum(p, w)),
+                               np.asarray(kernel(p, w)), atol=1e-5)
+    return {"K": K, "N": N, "C": C, "backend": jax.default_backend(),
+            "einsum_us": timeit(einsum), "kernel_us": timeit(kernel)}
+
+
+def run(fast: bool = True):
+    """benchmarks.run entry: (name, us_per_call, derived) rows +
+    BENCH_engine.json side effect."""
+    scan = bench_loop_vs_scan(fast)
+    wera = bench_weighted_era(fast)
+    with open(OUT_JSON, "w") as f:
+        json.dump({"scan": scan, "weighted_era": wera}, f, indent=2)
+
+    rows = []
+    for chunk in CHUNKS:
+        us = scan["per_round_us"][f"chunk{chunk}"]
+        rows.append((f"engine_round_chunk{chunk}", us,
+                     f"speedup={scan['speedup_vs_loop'][f'chunk{chunk}']:.2f}x"))
+    rows.append(("weighted_era_einsum", wera["einsum_us"], ""))
+    rows.append(("weighted_era_kernel", wera["kernel_us"],
+                 f"backend={wera['backend']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: tiny MLP, 8 clients, 32 rounds; asserts "
+                         "the chunked scan beats the per-round loop")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(fast=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    with open(OUT_JSON) as f:
+        bench = json.load(f)
+    per_round = bench["scan"]["per_round_us"]
+    print(f"wrote {OUT_JSON}: {per_round}")
+    if args.smoke:
+        assert per_round["chunk32"] < per_round["chunk1"], (
+            "scan chunking failed to beat the per-round loop: "
+            f"{per_round}")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,7 @@ BENCHES = [
     ("fig8", "benchmarks.noisy_open"),           # noisy open data
     ("table4", "benchmarks.poisoning"),          # model poisoning
     ("ttacc", "benchmarks.time_to_accuracy"),    # sim: acc vs wallclock/bytes
+    ("engine", "benchmarks.engine_bench"),       # loop-vs-scan + weighted ERA
     ("kernels", "benchmarks.kernels_bench"),     # Pallas kernels
     ("roofline", "benchmarks.roofline_report"),  # dry-run roofline table
 ]

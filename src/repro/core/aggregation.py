@@ -51,20 +51,42 @@ def _normalize_weights(weights: jax.Array) -> jax.Array:
     return jnp.where(total > 0, w / jnp.maximum(total, 1e-9), uniform)
 
 
-def weighted_sa(local_probs: jax.Array, weights: jax.Array) -> jax.Array:
+def _kernel_eligible(local_probs: jax.Array) -> bool:
+    """The fused weighted kernel handles the (K, N, C) classification shape;
+    higher-rank stacks (the LLM's (K, n, S, V)) keep the einsum path."""
+    return local_probs.ndim == 3
+
+
+def weighted_sa(local_probs: jax.Array, weights: jax.Array,
+                use_kernel: bool = False,
+                interpret: bool | None = None) -> jax.Array:
     """Weighted simple aggregation: the SA mean restricted to (or biased
     toward) the clients with nonzero weight.  Absent clients (weight 0)
     contribute exactly nothing — `sum(0 * p) == sum()` bitwise for the
-    finite probability tensors crossing the wire."""
+    finite probability tensors crossing the wire.  ``use_kernel=True``
+    routes (K, N, C) stacks through the fused Pallas weighted-mean kernel
+    (one VMEM pass, no HBM round-trip for the intermediate)."""
     w = _normalize_weights(weights)
+    if use_kernel and _kernel_eligible(local_probs):
+        from repro.kernels import ops as kops
+        return kops.weighted_mean(local_probs, w, interpret=interpret)
     return jnp.einsum("k,k...->...", w, local_probs.astype(F32))
 
 
 def weighted_era(local_probs: jax.Array, weights: jax.Array,
-                 temperature: float = 0.1) -> jax.Array:
+                 temperature: float = 0.1, use_kernel: bool = False,
+                 interpret: bool | None = None) -> jax.Array:
     """Reliability-weighted ERA. weights: (K,) nonneg, normalized here.
     An all-zero weight vector falls back to uniform weights explicitly
-    (== plain ERA) instead of silently sharpening a zero mean."""
+    (== plain ERA) instead of silently sharpening a zero mean.
+    ``use_kernel=True`` fuses weighted mean + sharpen into one VMEM pass
+    (`kernels.era_sharpen.weighted_era_sharpen_pallas`) instead of the
+    two-pass einsum + softmax."""
+    if use_kernel and _kernel_eligible(local_probs):
+        from repro.kernels import ops as kops
+        return kops.weighted_era_sharpen(
+            local_probs, _normalize_weights(weights), temperature,
+            interpret=interpret)
     mean = weighted_sa(local_probs, weights)
     return jax.nn.softmax(mean / temperature, axis=-1)
 
@@ -97,13 +119,23 @@ def aggregate(local_probs: jax.Array, method: str = "era",
               temperature: float = 0.1, weights=None,
               use_kernel: bool = False,
               interpret: bool | None = None) -> jax.Array:
+    """Dispatch on the paper's aggregation methods.  Whenever ``weights`` is
+    given, ``use_kernel=True`` routes through the fused *weighted* Pallas
+    kernel (weighted mean + optional sharpen in one VMEM pass) — the
+    partial-participation/sim path no longer falls back to einsum+softmax."""
     if method == "sa":
+        if weights is not None:
+            return weighted_sa(local_probs, weights, use_kernel, interpret)
         return sa(local_probs)
     if method == "era":
+        if weights is not None:
+            return weighted_era(local_probs, weights, temperature,
+                                use_kernel, interpret)
         return era(local_probs, temperature, use_kernel, interpret)
     if method == "weighted_era":
         assert weights is not None
-        return weighted_era(local_probs, weights, temperature)
+        return weighted_era(local_probs, weights, temperature,
+                            use_kernel, interpret)
     raise ValueError(method)
 
 
@@ -125,11 +157,30 @@ def topk_decompress(values: jax.Array, indices: jax.Array, C: int) -> jax.Array:
 
 def era_topk(local_values: jax.Array, local_indices: jax.Array, C: int,
              temperature: float = 0.1, k_out: int | None = None):
-    """Aggregate sparsified client uploads: densify -> mean -> sharpen.
-    Optionally re-sparsify the global logit for the broadcast leg."""
-    dense = jax.vmap(lambda v, i: topk_decompress(v, i, C))(
-        local_values, local_indices)
-    g = era(dense, temperature)
+    """Aggregate sparsified client uploads: fused scatter-accumulate mean ->
+    sharpen.  Optionally re-sparsify the global logit for the broadcast leg.
+
+    The K client uploads — ``local_values``/``local_indices`` of shape
+    (K, ..., k) over a C-way class axis — are scatter-added straight into
+    one (..., C) accumulator, so the mean costs O(N·C + K·N·k) memory
+    instead of materializing all K densified (..., C) copies (the old
+    ``vmap(topk_decompress)`` path was O(K·N·C) — prohibitive for
+    large-vocab LLM exchanges).  Equivalence with the dense path is pinned
+    in tests/test_aggregation.py."""
+    K = local_values.shape[0]
+    kk = local_values.shape[-1]
+    inner = local_values.shape[1:-1]               # row dims, e.g. (N,) / (n, S)
+    n = 1
+    for d in inner:
+        n *= d
+    # fold the client axis into the per-row slot axis: each of the n rows
+    # scatter-accumulates its K*k (index, value) pairs in one segment-sum
+    val = jnp.moveaxis(local_values.astype(F32), 0, -2).reshape(n, K * kk)
+    idx = jnp.moveaxis(local_indices.astype(jnp.int32), 0, -2).reshape(n, K * kk)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    mean = (jnp.zeros((n, C), F32).at[rows, idx].add(val) / K).reshape(
+        inner + (C,))
+    g = jax.nn.softmax(mean / temperature, axis=-1)
     if k_out is not None:
         return topk_compress(g, k_out)
     return g

@@ -163,11 +163,19 @@ class DSFLAlgorithm:
 
     ``corrupt(probs (K, n, C), xo, rng) -> probs`` optionally injects
     malicious local logits between "2. Prediction" and "4. Aggregation".
+
+    ``use_kernel=True`` routes "4. Aggregation" through the fused Pallas
+    mean+sharpen kernels — including the *weighted* variant on the masked
+    partial-participation (`repro.sim`) and weighted-ERA paths, which
+    previously always fell back to einsum+softmax (two extra HBM passes
+    over the (K, n, C) logit stack).  Default False: the pure-jnp route,
+    bit-pinned against the seed engine.
     """
     apply_fn: Callable
     hp: DSFLConfig
     corrupt: Optional[Callable] = None
     agg_weights: Optional[jax.Array] = None   # for aggregation="weighted_era"
+    use_kernel: bool = False
 
     name = "dsfl"
     uses_open = True
@@ -239,12 +247,16 @@ class DSFLAlgorithm:
             pw = participation_weights(
                 ctx.mask, ctx.stale if present(ctx.stale) else None,
                 hp.staleness_decay, base=agg_w)
-            global_logit = (weighted_sa(probs, pw) if hp.aggregation == "sa"
-                            else weighted_era(probs, pw, hp.temperature))
+            global_logit = (
+                weighted_sa(probs, pw, use_kernel=self.use_kernel)
+                if hp.aggregation == "sa"
+                else weighted_era(probs, pw, hp.temperature,
+                                  use_kernel=self.use_kernel))
         else:
             pw = agg_w
             global_logit = aggregate(probs, hp.aggregation, hp.temperature,
-                                     weights=agg_w)
+                                     weights=agg_w,
+                                     use_kernel=self.use_kernel)
         sa_entropy = jnp.mean(entropy(jnp.mean(probs, axis=0)))
         g_entropy = jnp.mean(entropy(global_logit))
 

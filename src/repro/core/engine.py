@@ -8,10 +8,20 @@ and checkpoints the full typed `RoundState` with the msgpack backend —
 together with the round counter and history, so save/load/run resumes the
 exact RNG stream without the caller hand-tracking ``start_round``.
 
+``run(..., chunk_rounds=k)`` compiles k federated rounds into a single
+``jax.lax.scan``: the per-round RNG chain, the open-batch draw and the
+algorithm's round all live inside one jit, with per-round metrics stacked
+on device and pulled to the host once per chunk — so the Python-loop
+overhead (one dispatch + one ``float()`` sync per round) disappears from
+the hot path.  The scanned path is **bitwise identical** to the default
+per-round loop (same key stream, same history), pinned by
+``tests/test_engine_scan.py`` across DSFL/FD/FedAvg.
+
 For the pod-scale LLM algorithms, pass ``mesh=`` (and optionally
 ``donate_state=True``): the engine builds its jit with mesh-aware
 ``in_shardings`` from ``algo.shardings(mesh, state, ctx)`` — the
 `launch.sharding` placement rules — and donates the round state's buffers.
+Both compose with ``chunk_rounds``.
 
 RNG discipline matches the seed engine exactly (``rng, rk, ri =
 split(rng, 3)`` per round; o_r drawn from ``ri``; the round keyed by
@@ -20,6 +30,7 @@ the reference `DSFLEngine` — asserted by ``tests/test_engine.py``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -38,6 +49,18 @@ from .wire import Codec, DenseF32Codec, nbytes
 def _leading_dim(tree) -> int:
     """First-axis size of a (possibly dict-of-arrays) batch pytree."""
     return jax.tree.leaves(tree)[0].shape[0]
+
+
+@jax.jit
+def _fast_forward_key(rng, n):
+    """Advance the per-round key chain (``rng <- split(rng, 3)[0]``) past n
+    completed rounds entirely on device.  ``n`` is traced, so one compiled
+    loop serves every resume point — resuming at round 10k is a single
+    dispatch, not 10k host-side ``jax.random.split`` calls — and the result
+    is bitwise the key the host loop would produce (asserted by
+    ``tests/test_engine_scan.py``)."""
+    return jax.lax.fori_loop(
+        0, n, lambda _, k: jax.random.split(k, 3)[0], rng)
 
 
 @dataclass
@@ -70,7 +93,9 @@ class FedEngine:
     rounds_done: int = 0
 
     def __post_init__(self):
-        self._round = None   # built on first use (shardings need state/ctx)
+        self._round = None       # manual override slot (None = use the cache)
+        self._round_cache = {}   # (state, ctx) treedef -> jitted round
+        self._chunk_cache = {}   # scan signature -> jitted k-round driver
 
     def _build_round(self, state: RoundState, ctx: BatchCtx):
         kw = {}
@@ -80,7 +105,84 @@ class FedEngine:
         if self.mesh is not None and shard_fn is not None:
             state_sh, ctx_sh = shard_fn(self.mesh, state, ctx)
             kw["in_shardings"] = (state_sh, ctx_sh, None)
+            # pin the output state to the same placement: round r+1 consumes
+            # round r's output, so a free XLA choice here would hand the next
+            # call an arg whose sharding mismatches in_shardings
+            kw["out_shardings"] = (state_sh, None)
         return jax.jit(self.algo.round, **kw)
+
+    def _get_round(self, state: RoundState, ctx: BatchCtx):
+        """The jitted round for this (state, ctx) *structure*.  Keyed on the
+        tree structure because ``on_ctx`` (or a sim plan) can flip
+        ``ctx.mask``/``stale`` from EMPTY to arrays mid-run: a round (and its
+        ``in_shardings``) built from the first round's treedef would then be
+        handed a ctx it was never built for — the stale-cache landmine
+        pinned by ``tests/test_engine_scan.py``."""
+        if self._round is not None:
+            return self._round
+        key = jax.tree_util.tree_structure((state, ctx))
+        fn = self._round_cache.get(key)
+        if fn is None:
+            fn = self._round_cache[key] = self._build_round(state, ctx)
+        return fn
+
+    def _build_chunk(self, k: int, n_open: int, n_r: int, state: RoundState,
+                     ctx0: BatchCtx, plan):
+        """One jit folding k federated rounds into a ``jax.lax.scan``: the
+        per-round key chain, the open-batch draw and the algorithm's round
+        all run on device; metrics come back stacked over the chunk.
+        ``plan`` (optional) is a dict of per-round BatchCtx overrides with a
+        leading (k,) axis — e.g. a sim scheduler's participation mask —
+        scanned through as per-step inputs."""
+        algo = self.algo
+        uses_open = algo.uses_open
+
+        def chunk_fn(state, ctx0, rng, plan):
+            def body(carry, step):
+                state, rng = carry
+                rng, rk, ri = jax.random.split(rng, 3)
+                ctx = ctx0
+                if uses_open:
+                    o_idx = jax.random.choice(ri, n_open, (n_r,),
+                                              replace=False)
+                    ctx = dataclasses.replace(ctx, o_idx=o_idx)
+                if step is not None:
+                    ctx = dataclasses.replace(ctx, **step)
+                state, m = algo.round(state, ctx, rk)
+                return (state, rng), m
+            (state, rng), ms = jax.lax.scan(body, (state, rng), plan,
+                                            length=k)
+            return state, rng, ms
+
+        kw = {}
+        if self.donate_state:
+            kw["donate_argnums"] = (0,)
+        shard_fn = getattr(algo, "shardings", None)
+        if self.mesh is not None and shard_fn is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            probe = (dataclasses.replace(ctx0, o_idx=jnp.zeros((n_r,),
+                                                               jnp.int32))
+                     if uses_open else ctx0)
+            state_sh, ctx_sh = shard_fn(self.mesh, state, probe)
+            if uses_open:
+                # o_idx is drawn inside the scan; the ctx argument omits it
+                ctx_sh = dataclasses.replace(ctx_sh, o_idx=EMPTY)
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            plan_sh = jax.tree.map(lambda _: rep, plan)
+            kw["in_shardings"] = (state_sh, ctx_sh, None, plan_sh)
+            # as in _build_round: the next chunk consumes this chunk's state
+            kw["out_shardings"] = (state_sh, None, None)
+        return jax.jit(chunk_fn, **kw)
+
+    def _get_chunk(self, k: int, n_open: int, n_r: int, state: RoundState,
+                   ctx0: BatchCtx, plan):
+        key = (k, n_open, n_r,
+               jax.tree_util.tree_structure((state, ctx0, plan)))
+        fn = self._chunk_cache.get(key)
+        if fn is None:
+            fn = self._chunk_cache[key] = self._build_chunk(
+                k, n_open, n_r, state, ctx0, plan)
+        return fn
 
     # ------------------------------------------------------------- setup ----
     def init(self, model_init: Callable, data, rng=None) -> RoundState:
@@ -102,35 +204,77 @@ class FedEngine:
     # --------------------------------------------------------------- run ----
     def run(self, state: RoundState, data, rounds: Optional[int] = None,
             weights=EMPTY, log_every: int = 1,
-            start_round: Optional[int] = None) -> RoundState:
+            start_round: Optional[int] = None, chunk_rounds: int = 1,
+            ctx_plan=None) -> RoundState:
         """Run ``rounds`` federated rounds starting at ``start_round``
         (default: ``self.rounds_done``, which ``load_state`` restores from a
         checkpoint).  The per-round RNG chain is fast-forwarded past the
         rounds already run, so a save/load/run sequence — or repeated
         ``run(rounds=1)`` calls on one engine — continues the exact key
-        stream (and round numbering) an uninterrupted run would produce."""
+        stream (and round numbering) an uninterrupted run would produce.
+
+        ``chunk_rounds=k`` folds k rounds at a time into one compiled
+        ``lax.scan`` (bitwise identical to the default per-round loop; see
+        ``_build_chunk``).  With ``eval_fn`` set, chunk boundaries snap to
+        ``log_every`` so every eval still sees the exact log-point state.
+        The per-round host hooks (``on_round``/``on_ctx``) force the loop
+        path — schedulers that can plan a whole chunk a priori pass
+        ``ctx_plan`` instead: a dict of per-round BatchCtx field overrides
+        (e.g. ``{"mask": (rounds, K), "stale": (rounds, K)}``) consumed by
+        both paths."""
         hp = self.algo.hp
         rounds = hp.rounds if rounds is None else rounds
         start = self.rounds_done if start_round is None else start_round
+        if ctx_plan is not None:
+            for f, v in ctx_plan.items():
+                if _leading_dim(v) < rounds:
+                    # fail loudly on both paths: jnp's clamped indexing would
+                    # silently reuse the last plan row on the loop path while
+                    # lax.scan raised on the scanned one
+                    raise ValueError(
+                        f"ctx_plan[{f!r}] covers {_leading_dim(v)} rounds; "
+                        f"run() needs {rounds}")
         rng = jax.random.PRNGKey(hp.seed)
-        for _ in range(start):
-            rng, _, _ = jax.random.split(rng, 3)
+        if start:
+            rng = _fast_forward_key(rng, start)
         if self.algo.uses_open:
             n_open = _leading_dim(data.open_x)
             n_r = min(hp.open_batch, n_open)
+        else:
+            n_open = n_r = 0
+        chunk = self._effective_chunk(chunk_rounds)
+        if chunk > 1:
+            if self.eval_fn is not None and log_every < chunk:
+                import warnings
+                warnings.warn(
+                    f"eval_fn snaps every scan segment to log_every="
+                    f"{log_every} rounds, discarding most of the requested "
+                    f"chunk_rounds={chunk} fusion (each eval needs a host "
+                    f"sync); pass log_every=chunk_rounds to actually fuse",
+                    stacklevel=2)
+            return self._run_scanned(state, data, rounds, weights, log_every,
+                                     start, rng, chunk, ctx_plan, n_open, n_r)
+        fn = None
         for r in range(start, start + rounds):
             rng, rk, ri = jax.random.split(rng, 3)
             o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
                      if self.algo.uses_open else EMPTY)
             ctx = self.make_ctx(data, o_idx=o_idx, weights=weights)
+            if ctx_plan is not None:
+                ctx = dataclasses.replace(
+                    ctx, **{f: v[r - start] for f, v in ctx_plan.items()})
             if self.on_ctx is not None:
                 # externally-supplied client subsets: a `repro.sim` scheduler
                 # (or any caller) rewrites the ctx — participation mask,
-                # staleness, weights — before the jitted round sees it
+                # staleness, weights — before the jitted round sees it.
+                # Only this hook can change the ctx *structure* round-to-
+                # round, so only here is the cached round re-resolved (a
+                # host-side pytree flatten) every round
                 ctx = self.on_ctx(r, ctx)
-            if self._round is None:
-                self._round = self._build_round(state, ctx)
-            state, m = self._round(state, ctx, rk)
+                fn = self._get_round(state, ctx)
+            elif fn is None:
+                fn = self._get_round(state, ctx)
+            state, m = fn(state, ctx, rk)
             if self.on_round is not None:
                 state = self.on_round(r, state)
             self.last_metrics = m
@@ -142,6 +286,47 @@ class FedEngine:
                 if self.eval_fn is not None:
                     rec.update(self.eval_fn(*self.algo.eval_params(state)))
                 self.history.append(rec)
+        return state
+
+    def _effective_chunk(self, chunk_rounds: int) -> int:
+        """Clamp the requested chunk: the per-round host hooks (and a
+        manually overridden ``_round``) cannot run inside a scan."""
+        chunk = max(1, int(chunk_rounds))
+        if (self.on_round is not None or self.on_ctx is not None
+                or self._round is not None):
+            return 1
+        return chunk
+
+    def _run_scanned(self, state, data, rounds, weights, log_every, start,
+                     rng, chunk, ctx_plan, n_open, n_r) -> RoundState:
+        r, end = start, start + rounds
+        while r < end:
+            k = min(chunk, end - r)
+            if self.eval_fn is not None:
+                # eval needs the state at every log point: snap the segment
+                # to end exactly on the next log boundary
+                k = min(k, (r // log_every + 1) * log_every - r)
+            plan = (None if ctx_plan is None else
+                    {f: v[r - start:r - start + k]
+                     for f, v in ctx_plan.items()})
+            ctx0 = self.make_ctx(data, weights=weights)
+            fn = self._get_chunk(k, n_open, n_r, state, ctx0, plan)
+            state, rng, ms = fn(state, ctx0, rng, plan)
+            self.last_metrics = {key: v[-1] for key, v in ms.items()}
+            # one host sync per chunk: the stacked per-round scalars land
+            # together instead of one float() device round-trip per round
+            scalars = jax.device_get({key: v for key, v in ms.items()
+                                      if jnp.ndim(v) == 1})
+            for i in range(k):
+                if (r + i + 1) % log_every != 0:
+                    continue
+                rec = {"round": r + i + 1,
+                       **{key: float(v[i]) for key, v in scalars.items()}}
+                if self.eval_fn is not None:   # i == k - 1 by the snap above
+                    rec.update(self.eval_fn(*self.algo.eval_params(state)))
+                self.history.append(rec)
+            r += k
+            self.rounds_done = r
         return state
 
     # -------------------------------------------------------- comm bytes ----

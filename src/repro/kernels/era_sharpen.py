@@ -1,10 +1,22 @@
-"""Fused ERA kernel: mean over the client axis + temperature softmax.
+"""Fused ERA kernels: (weighted) mean over the client axis + temperature
+softmax.
 
 On TPU this fuses the server's "4. Aggregation" (Eq. 13) into one VMEM pass:
 the (K, bn, C) tile is averaged on the VPU and sharpened without writing the
 intermediate mean back to HBM.  Row blocks tile N; the class dim stays whole
 in VMEM (classification regime, C <= ~32k; the large-vocab LLM path uses the
 top-k sparsified exchange instead — see core/aggregation.era_topk).
+
+``weighted_era_sharpen_pallas`` is the partial-participation variant: the
+(K, bn, C) tile is contracted against a (K,) weight vector — weighted mean
+and sharpen in the same single VMEM pass, so the sim's ``weighted_sa``/
+``weighted_era`` path no longer pays the two extra HBM passes of the
+einsum + softmax fallback.  A zero-weight (absent/dropped) client
+contributes exactly nothing: its tile rows are multiplied by an exact 0.0
+before the sum, so even garbage logits from a masked-out client cannot
+perturb the aggregate (asserted bitwise in tests/test_kernels.py).
+``sharpen=False`` skips the softmax and returns the weighted mean itself —
+the fused ``weighted_sa`` route.
 
 Non-divisible row counts are handled by zero-padding the row axis up to the
 block size: each row's mean+softmax is independent of every other row, so the
@@ -61,4 +73,51 @@ def era_sharpen_pallas(local_probs: jax.Array, temperature: float,
         out_shape=jax.ShapeDtypeStruct((n_pad, C), F32),
         interpret=interpret,
     )(local_probs)
+    return out[:N] if pad else out
+
+
+def _weighted_kernel(w_ref, probs_ref, out_ref, *, inv_temp: float,
+                     sharpen: bool):
+    # w_ref: (K, 1) f32; probs_ref: (K, bn, C) in VMEM; out_ref: (bn, C).
+    # The weighted sum runs on the VPU; an exact-zero weight annihilates its
+    # client's rows (0.0 * p == 0.0 and x + 0.0 == x for finite p), so
+    # absent clients contribute exactly nothing — no branch needed.
+    p = probs_ref[...].astype(F32)
+    w = w_ref[...].astype(F32)[:, :, None]                    # (K, 1, 1)
+    acc = jnp.sum(p * w, axis=0)                              # (bn, C)
+    if sharpen:
+        s = acc * inv_temp
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m)
+        acc = e / jnp.sum(e, axis=-1, keepdims=True)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def weighted_era_sharpen_pallas(local_probs: jax.Array, weights: jax.Array,
+                                temperature: float = 0.1, block_n: int = 8,
+                                sharpen: bool = True,
+                                interpret: bool | None = None) -> jax.Array:
+    """local_probs: (K, N, C), weights: (K,) — already normalized by the
+    caller (see ``core.aggregation._normalize_weights`` for the all-zero
+    fallback) — -> (N, C) f32: ``softmax(sum_k w_k p_k / T)`` in one VMEM
+    pass, or the weighted mean itself with ``sharpen=False``.  Any N (rows
+    padded to the block and sliced back); ``interpret=None`` = auto."""
+    interpret = resolve_interpret(interpret)
+    K, N, C = local_probs.shape
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    if pad:
+        local_probs = jnp.pad(local_probs, ((0, 0), (0, pad), (0, 0)))
+    n_pad = N + pad
+    w2d = weights.astype(F32).reshape(K, 1)
+    out = pl.pallas_call(
+        functools.partial(_weighted_kernel, inv_temp=1.0 / temperature,
+                          sharpen=sharpen),
+        grid=(n_pad // block_n,),
+        in_specs=[pl.BlockSpec((K, 1), lambda n: (0, 0)),
+                  pl.BlockSpec((K, block_n, C), lambda n: (0, n, 0))],
+        out_specs=pl.BlockSpec((block_n, C), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, C), F32),
+        interpret=interpret,
+    )(w2d, local_probs)
     return out[:N] if pad else out

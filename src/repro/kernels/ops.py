@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from .distill_loss import distill_loss_bwd_pallas, distill_loss_fwd_pallas
-from .era_sharpen import era_sharpen_pallas, resolve_interpret
+from .era_sharpen import (era_sharpen_pallas, resolve_interpret,
+                          weighted_era_sharpen_pallas)
 from .ssd_chunk import ssd_chunk_pallas
 
 INTERPRET: bool | None = None     # None = auto (CPU -> interpret, else compiled)
@@ -30,6 +31,26 @@ def era_sharpen(local_probs: jax.Array, temperature: float = 0.1,
     Any N (the kernel pads the row axis to its block internally)."""
     return era_sharpen_pallas(jax.lax.stop_gradient(local_probs), temperature,
                               interpret=_interp(interpret))
+
+
+def weighted_era_sharpen(local_probs: jax.Array, weights: jax.Array,
+                         temperature: float = 0.1,
+                         interpret: bool | None = None) -> jax.Array:
+    """(K, N, C) x (K,) normalized weights -> (N, C): weighted mean + sharpen
+    fused in one VMEM pass (the partial-participation teacher).  Zero-weight
+    clients contribute exactly nothing.  Not differentiated."""
+    return weighted_era_sharpen_pallas(
+        jax.lax.stop_gradient(local_probs), jax.lax.stop_gradient(weights),
+        temperature, interpret=_interp(interpret))
+
+
+def weighted_mean(local_probs: jax.Array, weights: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """(K, N, C) x (K,) normalized weights -> (N, C) weighted mean (the
+    fused ``weighted_sa`` route: same kernel, softmax skipped)."""
+    return weighted_era_sharpen_pallas(
+        jax.lax.stop_gradient(local_probs), jax.lax.stop_gradient(weights),
+        sharpen=False, interpret=_interp(interpret))
 
 
 # ------------------------------------------------------------ distill loss ---

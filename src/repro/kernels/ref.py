@@ -13,6 +13,18 @@ def era_sharpen_ref(local_probs: jax.Array, temperature: float) -> jax.Array:
     return jax.nn.softmax(mean / temperature, axis=-1)
 
 
+def weighted_era_sharpen_ref(local_probs: jax.Array, weights: jax.Array,
+                             temperature: float = 0.1,
+                             sharpen: bool = True) -> jax.Array:
+    """(K, N, C) x (K,) normalized weights -> (N, C) weighted mean, sharpened
+    unless ``sharpen=False`` (the partial-participation Eq. 13)."""
+    mean = jnp.einsum("k,knc->nc", weights.astype(F32),
+                      local_probs.astype(F32))
+    if not sharpen:
+        return mean
+    return jax.nn.softmax(mean / temperature, axis=-1)
+
+
 def distill_loss_ref(student_logits: jax.Array, teacher_probs: jax.Array):
     """(N, V) -> per-row soft-target CE (N,) in fp32."""
     x = student_logits.astype(F32)

@@ -19,10 +19,18 @@ round counter + history (``--ckpt``; a later run resumes the RNG stream).
 and a virtual clock charged from the measured wire bytes — per-round output
 then reports virtual wallclock and the participating cohort.
 
+``--chunk-rounds k`` folds k rounds into one compiled ``lax.scan``
+(`FedEngine.run(chunk_rounds=k)`) — bitwise identical to the per-round
+loop, minus its per-round dispatch overhead.  Under ``--participation``/
+``--straggler`` this is the *fused sim path*: the sync scheduler plans the
+whole chunk's participation a priori and the (k, K) mask/stale plan rides
+through the scan as per-step ctx inputs.
+
 On this CPU container use ``--smoke`` (reduced config).  Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
-      --mode dsfl --clients 2 --steps 20 [--participation 0.5 --straggler 30]
+      --mode dsfl --clients 2 --steps 20 --chunk-rounds 5 \
+      [--participation 0.5 --straggler 30]
 """
 from __future__ import annotations
 
@@ -83,6 +91,11 @@ def main(argv=None):
                          "dropped (or admitted late with --straggler-policy)")
     ap.add_argument("--straggler-policy", default="drop",
                     choices=["drop", "admit"])
+    ap.add_argument("--chunk-rounds", type=int, default=1,
+                    help="rounds fused per compiled lax.scan chunk (bitwise "
+                         "identical to the per-round loop); with "
+                         "--participation/--straggler this runs the fused "
+                         "sim path (sync participation planned per chunk)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -135,19 +148,28 @@ def main(argv=None):
                 pop, fraction=args.participation, deadline=args.straggler,
                 straggler=args.straggler_policy), seed=args.seed)
         with axis_ctx(mesh, batch_axes=("data",)):
-            for i in range(args.steps):
+            done = 0
+            while done < args.steps:
+                k = max(1, min(args.chunk_rounds, args.steps - done))
                 t0 = time.time()
                 if simulate:
-                    state = runner.run(state, task, rounds=1)
-                    rec = runner.history[-1]
-                    print(f"round {i:3d}  loss {rec['loss']:.4f}  "
-                          f"vt {rec['t_cum']:8.1f}s  "
-                          f"{rec['participants']}/{K} clients  "
-                          f"{time.time()-t0:.2f}s", flush=True)
+                    state = runner.run(state, task, rounds=k,
+                                       chunk_rounds=k)
+                    dt = (time.time() - t0) / k
+                    for rec in runner.history.records[-k:]:
+                        print(f"round {rec['round']-1:3d}  "
+                              f"loss {rec['loss']:.4f}  "
+                              f"vt {rec['t_cum']:8.1f}s  "
+                              f"{rec['participants']}/{K} clients  "
+                              f"{dt:.2f}s/round", flush=True)
                 else:
-                    state = eng.run(state, task, rounds=1)
-                    print(f"round {i:3d}  loss {eng.history[-1]['loss']:.4f}  "
-                          f"{time.time()-t0:.2f}s", flush=True)
+                    state = eng.run(state, task, rounds=k, chunk_rounds=k)
+                    dt = (time.time() - t0) / k
+                    for rec in eng.history[-k:]:
+                        print(f"round {rec['round']-1:3d}  "
+                              f"loss {rec['loss']:.4f}  "
+                              f"{dt:.2f}s/round", flush=True)
+                done += k
         if args.ckpt:
             if simulate:
                 runner.save_state(args.ckpt, state)   # + .sim.json sidecar

@@ -59,7 +59,16 @@ class SimRunner:
 
     # --------------------------------------------------------------- run ----
     def run(self, state: RoundState, data, rounds: Optional[int] = None,
-            weights=EMPTY, log_every: int = 1) -> RoundState:
+            weights=EMPTY, log_every: int = 1,
+            chunk_rounds: int = 1) -> RoundState:
+        """Drive ``rounds`` virtual rounds.  ``chunk_rounds=k`` runs the
+        fused sim path when the scheduler allows it: sync participation is
+        computable a priori from the measured per-leg bytes and the client
+        profiles, so k `RoundPlan`s are drawn up front, stacked into a
+        (k, K) mask/stale plan, and fed through the engine's compiled
+        ``lax.scan`` as per-step ctx inputs — bitwise identical to the
+        per-round path (tests/test_engine_scan.py).  Async scheduling
+        (``plannable=False``) keeps the per-round path."""
         eng = self.engine
         rounds = eng.algo.hp.rounds if rounds is None else rounds
         # per-leg bytes measured once on the encoded payload (shapes are
@@ -68,31 +77,57 @@ class SimRunner:
         if self._leg_bytes is None:
             self._leg_bytes = eng.measured_leg_bytes(state, data)
         up_bytes, down_bytes = self._leg_bytes
+        fused = (chunk_rounds > 1
+                 and getattr(self.scheduler, "plannable", False))
         prev_hook = eng.on_ctx
         try:
-            for _ in range(rounds):
-                r = eng.rounds_done
-                rng = np.random.default_rng([self.seed, r])
-                plan = self.scheduler.next_round(rng, up_bytes, down_bytes)
-                eng.on_ctx = self._hook(plan)
+            done = 0
+            while done < rounds:
+                k = min(chunk_rounds, rounds - done) if fused else 1
+                r0 = eng.rounds_done
+                plans = [self.scheduler.next_round(
+                    np.random.default_rng([self.seed, r0 + i]),
+                    up_bytes, down_bytes) for i in range(k)]
                 n_hist = len(eng.history)
-                state = eng.run(state, data, rounds=1, weights=weights,
-                                log_every=log_every)
-                self.cum_bytes += up_bytes * plan.n_participants + down_bytes
-                rec = {"round": r + 1,
-                       "t_round": plan.duration, "t_cum": plan.t_end,
-                       "participants": plan.n_participants,
-                       "dropped": int(plan.dropped.sum()),
-                       "mean_staleness": float(
-                           plan.staleness[plan.mask].mean()
-                           if plan.mask.any() else 0.0),
-                       "up_bytes": up_bytes * plan.n_participants,
-                       "down_bytes": down_bytes,
-                       "cum_bytes": self.cum_bytes}
-                if len(eng.history) > n_hist:      # engine logged this round
-                    rec.update({k: v for k, v in eng.history[-1].items()
-                                if k not in rec})
-                self.history.append(rec)
+                if fused:
+                    eng.on_ctx = None
+                    ctx_plan = None
+                    if not self.scheduler.idealized:
+                        ctx_plan = {
+                            "mask": jnp.asarray(
+                                np.stack([p.mask for p in plans]),
+                                jnp.float32),
+                            "stale": jnp.asarray(
+                                np.stack([p.staleness for p in plans]),
+                                jnp.int32)}
+                    state = eng.run(state, data, rounds=k, weights=weights,
+                                    log_every=log_every, chunk_rounds=k,
+                                    ctx_plan=ctx_plan)
+                else:
+                    eng.on_ctx = self._hook(plans[0])
+                    state = eng.run(state, data, rounds=1, weights=weights,
+                                    log_every=log_every)
+                eng_recs = {rec["round"]: rec
+                            for rec in eng.history[n_hist:]}
+                for i, plan in enumerate(plans):
+                    self.cum_bytes += (up_bytes * plan.n_participants
+                                       + down_bytes)
+                    rec = {"round": r0 + i + 1,
+                           "t_round": plan.duration, "t_cum": plan.t_end,
+                           "participants": plan.n_participants,
+                           "dropped": int(plan.dropped.sum()),
+                           "mean_staleness": float(
+                               plan.staleness[plan.mask].mean()
+                               if plan.mask.any() else 0.0),
+                           "up_bytes": up_bytes * plan.n_participants,
+                           "down_bytes": down_bytes,
+                           "cum_bytes": self.cum_bytes}
+                    eng_rec = eng_recs.get(r0 + i + 1)
+                    if eng_rec is not None:    # engine logged this round
+                        rec.update({k2: v for k2, v in eng_rec.items()
+                                    if k2 not in rec})
+                    self.history.append(rec)
+                done += k
         finally:
             eng.on_ctx = prev_hook
         return state

@@ -67,6 +67,12 @@ class SyncScheduler:
     #                                      from; -1 = no pending upload
     _round: int = 0
 
+    # sync participation depends only on the per-round rng and the measured
+    # leg bytes — never on training results — so a whole chunk of RoundPlans
+    # can be drawn up front and fed through the engine's compiled
+    # `chunk_rounds` scan as a (k, K) mask/stale plan (`SimRunner`)
+    plannable = True
+
     def __post_init__(self):
         if self.straggler not in ("drop", "admit"):
             raise ValueError(self.straggler)
@@ -133,6 +139,7 @@ class AsyncBufferScheduler:
     _round: int = 0
 
     idealized = False   # masks/staleness are structural in async mode
+    plannable = False   # buffered-async rounds stay on the per-round path
 
     def __post_init__(self):
         K = self.population.n_clients

@@ -131,3 +131,42 @@ def test_era_topk_pipeline(rng):
     g = agg.era_topk(v, i, 64, 0.1)
     # must be a valid, sharpened distribution with argmax from the topk mean
     np.testing.assert_allclose(np.sum(np.asarray(g), -1), 1.0, atol=1e-5)
+
+
+def _era_topk_dense_ref(v, i, C, T):
+    """The old O(K*N*C) path: densify every client, then mean + sharpen."""
+    dense = jax.vmap(lambda vv, ii: agg.topk_decompress(vv, ii, C))(v, i)
+    return agg.era(dense, T)
+
+
+@given(probs_strategy(max_k=5, max_n=4, max_c=8), st.integers(1, 4),
+       st.sampled_from([0.1, 0.5]))
+@settings(**SETTINGS)
+def test_era_topk_scatter_matches_dense_path(p, k, T):
+    """Satellite pin: the fused scatter-accumulate mean (no (K, N, C)
+    densified intermediate) is equivalent to densify-then-mean — including
+    colliding indices, where the scatter must accumulate."""
+    k = min(k, p.shape[-1])
+    v, i = jax.vmap(lambda x: agg.topk_compress(x, k))(p)
+    np.testing.assert_allclose(agg.era_topk(v, i, p.shape[-1], T),
+                               _era_topk_dense_ref(v, i, p.shape[-1], T),
+                               atol=1e-5)
+
+
+def test_era_topk_scatter_matches_dense_4d(rng):
+    """LLM-shaped (K, n, S, k) uploads take the same fused path."""
+    p = jax.nn.softmax(jax.random.normal(rng, (3, 2, 5, 32)) * 2, -1)
+    v, i = jax.vmap(lambda x: agg.topk_compress(x, 4))(p)
+    np.testing.assert_allclose(agg.era_topk(v, i, 32, 0.1),
+                               _era_topk_dense_ref(v, i, 32, 0.1), atol=1e-6)
+
+
+def test_era_topk_resparsify_roundtrip(rng):
+    """k_out re-sparsifies the broadcast leg identically on both paths."""
+    p = jax.nn.softmax(jax.random.normal(rng, (4, 6, 24)) * 2, -1)
+    v, i = jax.vmap(lambda x: agg.topk_compress(x, 6))(p)
+    gv, gi = agg.era_topk(v, i, 24, 0.1, k_out=4)
+    ev, ei = agg.topk_compress(_era_topk_dense_ref(v, i, 24, 0.1), 4)
+    np.testing.assert_allclose(gv, ev, atol=1e-5)
+    np.testing.assert_array_equal(np.sort(np.asarray(gi), -1),
+                                  np.sort(np.asarray(ei), -1))

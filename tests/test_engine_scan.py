@@ -1,0 +1,278 @@
+"""Compiled multi-round execution: `FedEngine.run(chunk_rounds=k)` must be
+*bitwise* identical to the per-round reference loop — same key stream, same
+state, same history — for every algorithm, under partial-participation
+plans, across checkpoint/resume, and for any factorization of the round
+range into chunks (hypothesis).  Also pins the scan-based RNG fast-forward
+and the (state, ctx)-treedef-keyed jit cache (the stale `in_shardings`
+landmine)."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import (BatchCtx, DSFLAlgorithm, FDAlgorithm,
+                                   FDConfig, FedAvgAlgorithm, FedAvgConfig)
+from repro.core.engine import FedEngine, _fast_forward_key, make_eval_fn
+from repro.core.protocol import DSFLConfig
+from repro.data.pipeline import build_image_task
+from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.sim import ClientPopulation, SimRunner, SyncScheduler
+
+K = 4
+R = 6
+HP = DSFLConfig(rounds=R, local_epochs=1, distill_epochs=1, batch_size=20,
+                open_batch=40, aggregation="era")
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_image_task(seed=0, K=K, n_private=160, n_open=80, n_test=40,
+                            distribution="non_iid")
+
+
+def _init(k):
+    return init_tiny_mlp(k)
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _run(algo, task, rounds=R, chunk=1, weights=(), ev=None, log_every=1,
+         ctx_plan=None):
+    eng = FedEngine(algo, ev)
+    state = eng.run(eng.init(_init, task), task, rounds=rounds,
+                    weights=weights, log_every=log_every,
+                    chunk_rounds=chunk, ctx_plan=ctx_plan)
+    return eng, state
+
+
+# ------------------------------------------------------------- scan parity --
+def _algo(kind, task):
+    if kind.startswith("dsfl"):
+        hp = dataclasses.replace(HP, aggregation=kind.split("_", 1)[1])
+        return DSFLAlgorithm(apply_tiny_mlp, hp)
+    if kind == "fd":
+        return FDAlgorithm(apply_tiny_mlp,
+                           FDConfig(rounds=R, local_epochs=1, batch_size=20,
+                                    gamma=0.1, n_classes=task.n_classes))
+    return FedAvgAlgorithm(apply_tiny_mlp,
+                           FedAvgConfig(rounds=R, local_epochs=1,
+                                        batch_size=20))
+
+
+@pytest.mark.parametrize("kind", ["dsfl_sa", "dsfl_era", "dsfl_weighted_era",
+                                  "fd", "fedavg"])
+@pytest.mark.parametrize("chunk", [2, 3, 8])
+def test_scan_is_bitwise_identical_to_loop(task, kind, chunk):
+    """The tentpole pin: folding k rounds into one lax.scan changes nothing
+    — not the final state's bits, not a single history float."""
+    weights = jnp.ones((K,)) if kind == "fedavg" else ()
+    e1, s1 = _run(_algo(kind, task), task, weights=weights)
+    e2, s2 = _run(_algo(kind, task), task, chunk=chunk, weights=weights)
+    _assert_states_equal(s1, s2)
+    assert e1.history == e2.history
+    assert e2.rounds_done == R
+
+
+def test_scan_parity_with_eval_and_log_every(task):
+    """Chunk boundaries snap to log_every so each eval sees the exact
+    log-point state: history (incl. test accuracy) must match bitwise."""
+    ev = make_eval_fn(apply_tiny_mlp, task.x_test, task.y_test)
+    e1, s1 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task, ev=ev,
+                  log_every=2)
+    e2, s2 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task, ev=ev,
+                  log_every=2, chunk=4)
+    _assert_states_equal(s1, s2)
+    assert e1.history == e2.history
+    assert all("test_acc" in h for h in e2.history)
+
+
+def test_scan_parity_under_ctx_plan_mask(task):
+    """A pre-built (rounds, K) participation plan rides through the scan as
+    per-step ctx inputs — identical to slicing it round-by-round."""
+    mask = np.ones((R, K), np.float32)
+    mask[1] = [1, 0, 1, 0]
+    mask[4] = [0, 1, 1, 1]
+    stale = np.zeros((R, K), np.int32)
+    stale[4] = [0, 2, 0, 1]
+    plan = {"mask": jnp.asarray(mask), "stale": jnp.asarray(stale)}
+    e1, s1 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task, ctx_plan=plan)
+    e2, s2 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task, ctx_plan=plan,
+                  chunk=3)
+    _assert_states_equal(s1, s2)
+    assert e1.history == e2.history
+
+
+def test_sim_sync_masked_chunked_run_is_bitwise(task):
+    """Acceptance pin: a masked `SimRunner` sync-scheduler run (partial
+    participation + deadline + admitted stragglers) chunked through the
+    scan equals the per-round sim bitwise — state, engine history, sim
+    ledger."""
+    def make(chunk):
+        eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+        pop = ClientPopulation.lognormal(3, K, compute_sigma=0.8)
+        sched = SyncScheduler(pop, fraction=0.5, deadline=4.0,
+                              straggler="admit")
+        runner = SimRunner(eng, sched, seed=0)
+        state = runner.run(eng.init(_init, task), task, rounds=R,
+                           chunk_rounds=chunk)
+        return runner, state
+
+    r1, s1 = make(1)
+    for chunk in (2, 4):
+        r2, s2 = make(chunk)
+        _assert_states_equal(s1, s2)
+        assert r1.engine.history == r2.engine.history
+        assert r1.history.records == r2.history.records
+        assert r1.cum_bytes == r2.cum_bytes
+
+
+def test_resume_across_chunk_boundary(task, tmp_path):
+    """save -> load -> chunked run must continue the exact key stream: a
+    checkpoint taken mid-stream (not on a chunk boundary of the resumed
+    run) yields the same bits as the uninterrupted chunked run."""
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    full, s_full = _run(algo, task, chunk=4)
+
+    first = FedEngine(algo)
+    mid = first.run(first.init(_init, task), task, rounds=3, chunk_rounds=2)
+    path = os.path.join(tmp_path, "mid.msgpack")
+    first.save_state(path, mid)
+
+    second = FedEngine(algo)
+    restored = second.load_state(path, algo.init(jax.random.PRNGKey(0),
+                                                 _init, task))
+    assert second.rounds_done == 3
+    s_res = second.run(restored, task, rounds=R - 3, chunk_rounds=4)
+    _assert_states_equal(s_full, s_res)
+    assert second.history == full.history
+
+
+def test_ctx_plan_shorter_than_rounds_raises(task):
+    """A too-short plan must fail loudly on both paths (jnp's clamped
+    indexing would silently reuse the last row on the loop path)."""
+    plan = {"mask": jnp.ones((R - 1, K), jnp.float32)}
+    for chunk in (1, 3):
+        eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+        state = eng.init(_init, task)
+        with pytest.raises(ValueError, match="ctx_plan"):
+            eng.run(state, task, rounds=R, chunk_rounds=chunk, ctx_plan=plan)
+
+
+def test_chunk_with_eval_and_default_log_every_warns(task):
+    """eval_fn + log_every < chunk silently defeats the fusion; the engine
+    says so."""
+    ev = make_eval_fn(apply_tiny_mlp, task.x_test, task.y_test)
+    eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP), ev)
+    state = eng.init(_init, task)
+    with pytest.warns(UserWarning, match="log_every"):
+        eng.run(state, task, rounds=2, chunk_rounds=2)
+
+
+# -------------------------------------------------- chunking invariance -----
+def test_chunk_factorization_invariance_hypothesis(task):
+    """Property: ANY factorization of run(rounds=R) into chunk_rounds
+    segments — mixed chunk sizes, interleaved per-round calls, a
+    save/load/resume at an arbitrary boundary — produces the identical
+    final state and history."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    ref_eng, ref_state = _run(algo, task)
+    ref_leaves = [np.asarray(l) for l in jax.tree.leaves(ref_state)]
+    eng = FedEngine(algo)   # one engine: its jit caches persist across runs
+
+    @st.composite
+    def segmentations(draw):
+        segs, left = [], R
+        while left > 0:
+            n = draw(st.integers(1, left))
+            segs.append((n, draw(st.integers(1, 8))))   # (rounds, chunk)
+            left -= n
+        return segs
+
+    @given(segmentations(), st.data())
+    @settings(deadline=None, max_examples=8,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(segs, data):
+        import tempfile
+        state = eng.init(_init, task)
+        ckpt_at = data.draw(st.integers(0, len(segs) - 1))
+        for j, (n, chunk) in enumerate(segs):
+            state = eng.run(state, task, rounds=n, chunk_rounds=chunk)
+            if j == ckpt_at:
+                with tempfile.TemporaryDirectory() as d:
+                    path = os.path.join(d, "seg.msgpack")
+                    eng.save_state(path, state)
+                    state = eng.load_state(path, state)
+        assert eng.rounds_done == R
+        for a, b in zip(ref_leaves, jax.tree.leaves(state)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        assert eng.history == ref_eng.history
+
+    check()
+
+
+# ------------------------------------------------------ RNG fast-forward ----
+def test_fast_forward_key_matches_host_loop_bitwise(rng):
+    """The satellite pin: the jitted device-side fast-forward produces
+    bitwise the key the seed engine's host loop would."""
+    for n in (0, 1, 7, 500):
+        expect = rng
+        for _ in range(n):
+            expect, _, _ = jax.random.split(expect, 3)
+        got = _fast_forward_key(rng, n)
+        np.testing.assert_array_equal(np.asarray(expect), np.asarray(got))
+
+
+# ----------------------------------------------------- stale jit cache ------
+@dataclasses.dataclass(frozen=True)
+class _ShardedFedAvg(FedAvgAlgorithm):
+    """FedAvg exposing replicate-everything shardings, to drive the
+    mesh-aware `in_shardings` jit on a 1-device mesh."""
+
+    def shardings(self, mesh, state, ctx):
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        return (jax.tree.map(lambda _: rep, state),
+                jax.tree.map(lambda _: rep, ctx))
+
+
+def test_round_cache_rebuilds_when_ctx_structure_changes(task):
+    """Regression: the jitted round (and its in_shardings) used to be built
+    once from the *first* round's ctx treedef; an `on_ctx` hook flipping
+    mask/stale from EMPTY to arrays then handed it a ctx it was never
+    built for.  The cache is now keyed on the (state, ctx) tree structure
+    and rebuilds on change."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("d",))
+    algo = _ShardedFedAvg(apply_tiny_mlp,
+                          FedAvgConfig(rounds=2, local_epochs=1,
+                                       batch_size=20))
+    eng = FedEngine(algo, mesh=mesh)
+    state = eng.init(_init, task)
+    state = eng.run(state, task, rounds=1)          # full participation
+    mask = jnp.array([1.0, 0.0, 1.0, 1.0])
+    eng.on_ctx = lambda r, ctx: dataclasses.replace(ctx, mask=mask)
+    state = eng.run(state, task, rounds=1)          # ctx treedef changed
+    assert float(eng.last_metrics["participants"]) == 3.0
+    assert len(eng._round_cache) == 2               # one round per treedef
+
+
+def test_manual_round_override_still_wins(task):
+    """`_round` stays a manual override slot (tests monkeypatch it); the
+    treedef cache must not shadow it."""
+    algo = FedAvgAlgorithm(apply_tiny_mlp,
+                           FedAvgConfig(rounds=1, local_epochs=1,
+                                        batch_size=20))
+    eng = FedEngine(algo)
+    state = algo.init_from(*_init(jax.random.PRNGKey(0)))
+    eng._round = lambda s, c, k: (s, {"stub": 1.0})
+    eng.run(state, task, rounds=1)
+    assert eng.history[0]["stub"] == 1.0

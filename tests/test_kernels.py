@@ -69,6 +69,102 @@ def test_era_kernel_interpret_resolution(monkeypatch):
     assert es.resolve_interpret(None) is False
 
 
+# ------------------------------------------------- weighted ERA kernel ------
+@pytest.mark.parametrize("K,N,C", [(2, 8, 10), (10, 64, 46), (5, 16, 512),
+                                   (3, 31, 151)])
+@pytest.mark.parametrize("T", [0.1, 0.5])
+def test_weighted_era_sharpen_sweep(rng, K, N, C, T):
+    """The fused weighted mean+sharpen kernel vs the jnp reference, fp32
+    tolerance, including a zero-weight row and a non-divisible N."""
+    from repro.kernels.era_sharpen import weighted_era_sharpen_pallas
+    k1, k2 = jax.random.split(rng)
+    p = jax.nn.softmax(jax.random.normal(k1, (K, N, C)) * 2, -1)
+    w = jax.random.uniform(k2, (K,)).at[0].set(0.0)
+    w = w / jnp.sum(w)
+    out = weighted_era_sharpen_pallas(p, w, T, interpret=True)
+    np.testing.assert_allclose(out, ref.weighted_era_sharpen_ref(p, w, T),
+                               atol=1e-6)
+    mean = weighted_era_sharpen_pallas(p, w, sharpen=False, interpret=True)
+    np.testing.assert_allclose(
+        mean, ref.weighted_era_sharpen_ref(p, w, sharpen=False), atol=1e-6)
+
+
+def test_weighted_era_zero_weight_client_contributes_exactly_nothing(rng):
+    """Acceptance pin: a zero-weight (absent) client's logits must not
+    perturb the aggregate by a single bit — even when they are garbage."""
+    from repro.kernels.era_sharpen import weighted_era_sharpen_pallas
+    p = jax.nn.softmax(jax.random.normal(rng, (4, 9, 12)), -1)
+    w = jnp.array([0.0, 0.5, 0.5, 0.0])
+    garbage = p.at[0].set(1e30).at[3].set(-1e30)
+    a = weighted_era_sharpen_pallas(p, w, 0.1, interpret=True)
+    b = weighted_era_sharpen_pallas(garbage, w, 0.1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("N,block_n", [(100, 8), (1, 8), (13, 8), (9, 16)])
+def test_weighted_era_nondivisible_rows(rng, N, block_n):
+    from repro.kernels.era_sharpen import weighted_era_sharpen_pallas
+    p = jax.nn.softmax(jax.random.normal(rng, (3, N, 21)), -1)
+    w = jnp.array([0.2, 0.5, 0.3])
+    out = weighted_era_sharpen_pallas(p, w, 0.1, block_n=block_n,
+                                      interpret=True)
+    assert out.shape == (N, 21)
+    np.testing.assert_allclose(out, ref.weighted_era_sharpen_ref(p, w, 0.1),
+                               atol=1e-6)
+
+
+def test_aggregate_with_weights_routes_weighted_kernel(rng, monkeypatch):
+    """Acceptance pin: aggregate(..., use_kernel=True) with weights must hit
+    the fused weighted kernel (not the einsum+softmax fallback), and match
+    it."""
+    from repro.core import aggregation as agg
+    calls = []
+    orig = ops.weighted_era_sharpen_pallas
+    monkeypatch.setattr(ops, "weighted_era_sharpen_pallas",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    p = jax.nn.softmax(jax.random.normal(rng, (4, 8, 10)) * 2, -1)
+    w = jnp.array([1.0, 2.0, 0.0, 1.0])
+    for method in ("weighted_era", "era", "sa"):
+        out = agg.aggregate(p, method, 0.1, weights=w, use_kernel=True,
+                            interpret=True)
+        exp = agg.aggregate(p, method, 0.1, weights=w)
+        np.testing.assert_allclose(out, exp, atol=1e-6)
+    assert len(calls) == 3
+    # the LLM-shaped 4-D stack stays on the einsum path (kernel is 3-D)
+    p4 = jax.nn.softmax(jax.random.normal(rng, (3, 2, 4, 8)), -1)
+    out4 = agg.weighted_era(p4, jnp.ones((3,)), 0.1, use_kernel=True)
+    np.testing.assert_allclose(out4, agg.weighted_era(p4, jnp.ones((3,)), 0.1),
+                               atol=1e-6)
+    assert len(calls) == 3
+
+
+def test_masked_dsfl_round_uses_weighted_kernel(rng, monkeypatch):
+    """DSFLAlgorithm(use_kernel=True): the masked (sim) round's aggregation
+    routes through the fused weighted kernel."""
+    import dataclasses
+    from repro.core.algorithms import DSFLAlgorithm
+    from repro.core.engine import FedEngine
+    from repro.core.protocol import DSFLConfig
+    from repro.data.pipeline import build_image_task
+    from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+    calls = []
+    orig = ops.weighted_era_sharpen_pallas
+    monkeypatch.setattr(ops, "weighted_era_sharpen_pallas",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    task = build_image_task(seed=0, K=4, n_private=80, n_open=40, n_test=20,
+                            distribution="non_iid")
+    hp = DSFLConfig(rounds=1, local_epochs=1, distill_epochs=1, batch_size=20,
+                    open_batch=20, aggregation="era")
+    algo = DSFLAlgorithm(apply_tiny_mlp, hp, use_kernel=True)
+    eng = FedEngine(algo)
+    mask = jnp.array([1.0, 0.0, 1.0, 1.0])
+    eng.on_ctx = lambda r, ctx: dataclasses.replace(ctx, mask=mask)
+    eng.run(eng.init(lambda k: init_tiny_mlp(k), task), task, rounds=1)
+    assert calls, "masked round fell back to einsum+softmax"
+    # absent client still gets exactly zero aggregation weight
+    assert float(eng.last_metrics["agg_weights"][1]) == 0.0
+
+
 def test_weighted_era_all_zero_weights_fall_back_to_uniform(rng):
     """All-zero reliability weights must degrade to plain ERA (uniform
     weights), not sharpen a zero mean into a uniform teacher."""

@@ -125,6 +125,33 @@ def test_llm_dsfl_sharded_engine_round_runs(task, stacked, tmp_path):
                                    atol=5e-2, rtol=1e-2)
 
 
+def test_llm_dsfl_sharded_engine_chunked_scan_parity(task, stacked):
+    """chunk_rounds composes with mesh= in_shardings + donate_state: two
+    scanned rounds equal two per-round loop rounds bitwise (also pins the
+    out_shardings fix — round 2 consumes round 1's output placement)."""
+    hp = LLMDsflHP(lr=5e-3, rounds=2, seed=0, open_batch=B)
+    algo = LLMDSFLAlgorithm(CFG, hp)
+    mesh = _pod_mesh()
+
+    def go(chunk):
+        eng = FedEngine(algo, mesh=mesh, donate_state=True)
+        state = algo.init_from(jax.tree.map(jnp.copy, stacked))
+        with axis_ctx(mesh, batch_axes=("data",)):
+            out = eng.run(state, task, rounds=2, chunk_rounds=chunk)
+        return eng, out
+
+    e1, o1 = go(1)
+    e2, o2 = go(2)
+    assert e1.history == e2.history
+    for a, b in zip(jax.tree.leaves(o1.clients.params),
+                    jax.tree.leaves(o2.clients.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pod_size = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+    if pod_size > 1:
+        sh = jax.tree.leaves(o2.clients.params)[0].sharding
+        assert "pod" in sh.spec
+
+
 # ------------------------------------------------------- wire/comm parity ----
 def test_llm_topk_measured_bytes_match_comm_model(task, stacked):
     """The LLM exchange's measured top-k bytes == CommModel.dsfl_topk_round
