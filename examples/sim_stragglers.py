@@ -14,6 +14,13 @@ whole chunk ahead, and the chunk runs as one compiled `lax.scan` inside the
 engine (`FedEngine.run(chunk_rounds=k, ctx_plan=...)`) — bitwise identical
 to the per-round loop, without its one-dispatch-per-round host overhead.
 
+At 10% participation the round is also *participation-sparse* by default
+(``active_budget="auto"``): the engine computes only the scheduler's
+budgeted ~``2 * ceil(0.1 * K)`` client lanes (admitted stragglers can ride
+on top of the sampled cohort) instead of the full K-client stack — same
+bits, ~K/m cheaper.  ``--dense`` forces the old full-stack masked round
+for comparison.
+
   PYTHONPATH=src python examples/sim_stragglers.py          # ~2 min on CPU
   PYTHONPATH=src python examples/sim_stragglers.py --fast   # smoke (~30 s)
 """
@@ -39,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=4,
                     help="rounds fused per compiled lax.scan chunk "
                          "(1 = the per-round loop; bitwise identical)")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense masked round (compute all K "
+                         "clients) instead of the participation-sparse "
+                         "plane; bitwise identical, ~K/m slower")
     args = ap.parse_args(argv)
 
     K = 20 if args.fast else args.clients
@@ -70,10 +81,14 @@ def main(argv=None):
     # chunk keeps each scan segment fully fused (chunk snaps to log_every)
     chunk = max(1, min(args.chunk, rounds))
     runner.run(state, task, rounds=rounds, chunk_rounds=chunk,
-               log_every=chunk)
+               log_every=chunk,
+               active_budget=None if args.dense else "auto")
 
+    budget = sched.active_budget
     print(f"\n{K} clients, {args.participation:.0%} participation/round, "
-          f"deadline {args.deadline:.0f}s")
+          f"deadline {args.deadline:.0f}s, "
+          + ("dense masked rounds" if args.dense or budget >= K else
+         f"sparse rounds: {budget}/{K} client lanes computed"))
     for rec in runner.history:
         acc = (f"acc {rec['test_acc']:.3f}" if "test_acc" in rec
                else "acc   ----")   # evals land at chunk boundaries

@@ -19,6 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .losses import pinned_sum
+
 F32 = jnp.float32
 
 
@@ -44,9 +46,12 @@ def era(local_probs: jax.Array, temperature: float = 0.1,
 
 def _normalize_weights(weights: jax.Array) -> jax.Array:
     """(K,) nonneg -> normalized; an all-zero vector falls back to uniform
-    explicitly instead of silently producing a zero mean."""
+    explicitly instead of silently producing a zero mean.  The total is a
+    dot-lowered sum (`losses.pinned_sum`) so the normalization is bitwise
+    identical between the dense masked and participation-sparse round
+    programs (a plain fused reduce may reassociate per-program)."""
     w = weights.astype(F32)
-    total = jnp.sum(w)
+    total = pinned_sum(w)
     uniform = jnp.full_like(w, 1.0 / w.shape[0])
     return jnp.where(total > 0, w / jnp.maximum(total, 1e-9), uniform)
 
@@ -63,7 +68,11 @@ def weighted_sa(local_probs: jax.Array, weights: jax.Array,
     """Weighted simple aggregation: the SA mean restricted to (or biased
     toward) the clients with nonzero weight.  Absent clients (weight 0)
     contribute exactly nothing — `sum(0 * p) == sum()` bitwise for the
-    finite probability tensors crossing the wire.  ``use_kernel=True``
+    finite probability tensors crossing the wire.  The participation-sparse
+    round plane (`algorithms.active_indices`/`scatter_zeros`) rides on this
+    guarantee: it never computes absent clients' uploads at all and hands
+    this function exact zeros in their lanes instead, which multiply to the
+    same exact 0.0 the dense masked stack's lanes do.  ``use_kernel=True``
     routes (K, N, C) stacks through the fused Pallas weighted-mean kernel
     (one VMEM pass, no HBM round-trip for the intermediate)."""
     w = _normalize_weights(weights)

@@ -45,16 +45,23 @@ from .aggregation import (aggregate, participation_weights, weighted_era,
                           weighted_sa)
 from .client import LocalSpec, local_distill, local_update, predict_probs
 from .fedavg import weighted_average
-from .losses import entropy
+from .losses import entropy, pinned_mean, pinned_sum
 from .protocol import DSFLConfig  # noqa: F401  (re-exported as part of the API)
 
 EMPTY = ()   # absent pytree slot (contributes no leaves)
 
 
-def _pytree_dataclass(cls):
-    fields = [f.name for f in dataclasses.fields(cls)]
-    return jax.tree_util.register_dataclass(cls, data_fields=fields,
-                                            meta_fields=[])
+def _pytree_dataclass(cls=None, *, meta=()):
+    """Register a frozen dataclass as a JAX pytree.  ``meta`` names fields
+    that are *static* (part of the treedef, not traced leaves) — e.g.
+    ``BatchCtx.active_budget``, which fixes array shapes and must therefore
+    be a Python int at trace time.  A changed meta value changes the treedef,
+    so `FedEngine`'s treedef-keyed jit caches recompile automatically."""
+    def wrap(c):
+        fields = [f.name for f in dataclasses.fields(c) if f.name not in meta]
+        return jax.tree_util.register_dataclass(c, data_fields=fields,
+                                                meta_fields=list(meta))
+    return wrap(cls) if cls is not None else wrap
 
 
 # --------------------------------------------------------------- states ------
@@ -84,7 +91,7 @@ class RoundState:
     server: ServerState = ServerState()
 
 
-@_pytree_dataclass
+@_pytree_dataclass(meta=("active_budget",))
 @dataclass(frozen=True)
 class BatchCtx:
     """Per-round data context (a single pytree argument to ``round``).
@@ -94,7 +101,22 @@ class BatchCtx:
     to aggregation that round, and stale contributions (an async client that
     last synced its global labels ``stale`` aggregations ago) are discounted
     by the algorithm's ``staleness_decay``.  Left EMPTY, the round is the
-    exact bit-pinned full-participation path."""
+    exact bit-pinned full-participation path.
+
+    ``active_budget`` is the participation-sparse compute budget: a *static*
+    upper bound m on how many clients can be active in any round this ctx
+    serves (pytree metadata, so shapes stay static and the round still fuses
+    into the engine's ``lax.scan``).  When set below K alongside ``mask``,
+    the algorithms gather the m active lanes out of the (K, ...) client
+    stack, run update/predict/distill on only those, and scatter results
+    back — a ~K/m per-round compute and activation-memory reduction that is
+    **bitwise identical** to the dense masked round (padding lanes carry
+    exactly zero aggregation weight).  ``None`` (default) keeps the dense
+    path.  Contract: ``1 <= popcount(mask) <= active_budget`` — schedulers
+    guarantee both by construction (`repro.sim.scheduler`; a zero-
+    participant round's aggregation falls back to uniform-over-K, which
+    needs the very uploads the sparse plane skips — `FedEngine.run` and
+    `SimRunner` reject violating plans loudly)."""
     x: Any = EMPTY          # (K, I_k, ...) private inputs
     y: Any = EMPTY          # (K, I_k) private labels
     open_x: Any = EMPTY     # (I_o, ...) the full shared open set
@@ -102,6 +124,7 @@ class BatchCtx:
     weights: Any = EMPTY    # (K,) client dataset sizes (FedAvg Eq. 3)
     mask: Any = EMPTY       # (K,) 0/1 participation this round
     stale: Any = EMPTY      # (K,) rounds since each client last synced
+    active_budget: Optional[int] = None   # static per-round activity bound m
 
 
 # ------------------------------------------------------------- protocol ------
@@ -152,8 +175,50 @@ def select_clients(mask, new_tree, old_tree):
 
 
 def masked_mean(values, mask):
-    m = mask.astype(jnp.float32)
-    return jnp.sum(values * m) / jnp.maximum(jnp.sum(m), 1.0)
+    """Mean of ``values`` over the mask-1 lanes, reduction order pinned
+    across programs (`losses.pinned_mean`): the dense masked round and the
+    participation-sparse round are two different XLA programs reducing
+    bitwise-identical (K,) inputs, and a plain fused reduce is free to
+    reassociate differently in each — a dot-lowered sum is not."""
+    return pinned_mean(values, mask.astype(jnp.float32))
+
+
+# --------------------------------------------- participation-sparse plane ----
+def active_indices(mask, budget: int):
+    """Jit-safe gather indices for the participation-sparse round:
+    (K,) mask -> (budget,) client indices.  A stable argsort over the 0/1
+    activity key puts participants first *in ascending client order* and
+    pads the remaining lanes with distinct non-participants — so a scatter
+    back via ``.at[idx].set`` never collides, and padding lanes land on
+    mask-0 clients whose results `select_clients` discards anyway.
+    Requires ``budget >= popcount(mask)`` (the scheduler contract); with
+    fewer lanes than participants, the overflow clients would silently keep
+    stale state while still carrying aggregation weight."""
+    key = jnp.where(mask > 0, jnp.int32(0), jnp.int32(1))
+    return jnp.argsort(key, stable=True)[:budget]
+
+
+def gather_clients(tree, idx):
+    """Per-leaf gather of the ``idx`` lanes along the leading client axis:
+    the (m, ...) active slice of a (K, ...) client stack."""
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), tree)
+
+
+def scatter_clients(new_tree, old_tree, idx):
+    """Write the computed (m, ...) lanes back into the (K, ...) stack.
+    ``idx`` lanes take the fresh leaves, all other clients keep their
+    previous state — the sparse-plane counterpart of `select_clients`."""
+    return jax.tree.map(lambda n, o: o.at[idx].set(n), new_tree, old_tree)
+
+
+def scatter_zeros(values_m, K: int, idx):
+    """Scatter (m, ...) per-lane results into an exact-zero (K, ...) buffer.
+    The untouched lanes are *exactly* 0.0, so any downstream reduction that
+    multiplies them by a zero participation weight is bitwise identical to
+    the dense masked computation (0.0 * x == 0.0 == 0.0 * 0.0 for finite
+    x) — the property the sparse round's bitwise-parity guarantee rides on."""
+    return jnp.zeros((K,) + values_m.shape[1:], values_m.dtype
+                     ).at[idx].set(values_m)
 
 
 # ---------------------------------------------------------------- DS-FL ------
@@ -206,6 +271,35 @@ class DSFLAlgorithm:
             server=ServerState(params=wg, model_state=sg,
                                opt_distill=spec_d.opt.init(wg)))
 
+    def _masked_teacher(self, probs, ctx: BatchCtx):
+        """"3-5. Upload / Aggregation / Broadcast" of a masked round, over
+        the full (K, n, C) upload stack.  Shared verbatim by the dense
+        masked path and the participation-sparse path: the sparse plane
+        scatters its computed prediction lanes into exact zeros, and every
+        reduction here multiplies non-participant lanes by an exact-zero
+        weight (``0.0 * x == 0.0`` for the finite probabilities crossing
+        the wire) — which is what makes the two paths bitwise identical."""
+        hp = self.hp
+        agg_w = self.agg_weights
+        if agg_w is None and hp.aggregation == "weighted_era":
+            # adaptive reliability (paper §5 "future work"): inverse mean
+            # entropy of each client's uploaded soft labels — absent lanes
+            # get a finite garbage value that the mask zeroes exactly
+            ent_k = jnp.mean(entropy(probs), axis=-1)           # (K,)
+            agg_w = 1.0 / (ent_k + 1e-3)
+        pw = participation_weights(
+            ctx.mask, ctx.stale if present(ctx.stale) else None,
+            hp.staleness_decay, base=agg_w)
+        global_logit = (
+            weighted_sa(probs, pw, use_kernel=self.use_kernel)
+            if hp.aggregation == "sa"
+            else weighted_era(probs, pw, hp.temperature,
+                              use_kernel=self.use_kernel))
+        # the unsharpened SA diagnostic over the uploads that actually
+        # happened: mask-weighted, since absent clients upload nothing
+        sa_entropy = jnp.mean(entropy(weighted_sa(probs, ctx.mask)))
+        return pw, global_logit, sa_entropy
+
     def round(self, state: RoundState, ctx: BatchCtx, rng):
         hp = self.hp
         spec_u, spec_d = self._specs()
@@ -214,9 +308,15 @@ class DSFLAlgorithm:
         wg, sg = state.server.params, state.server.model_state
         odg = state.server.opt_distill
         K = ctx.x.shape[0]
+        masked = present(ctx.mask)
+        if (masked and ctx.active_budget is not None
+                and ctx.active_budget < K and self.corrupt is None):
+            # participation-sparse plane: compute only the active clients
+            # (`corrupt` sees the full upload stack, so it keeps the dense
+            # path — attack evaluation is not a perf path)
+            return self._sparse_round(state, ctx, rng, ctx.active_budget)
         r1, r2, r3, r4 = jax.random.split(rng, 4)
         xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
-        masked = present(ctx.mask)
 
         # 1. Update (always computed for the full stack — a fused where keeps
         # absent clients' state; no per-client Python loop, shards cleanly)
@@ -236,28 +336,21 @@ class DSFLAlgorithm:
             probs = self.corrupt(probs, xo, r3)
 
         # 3-5. Upload / Aggregation / Broadcast
-        agg_w = self.agg_weights
-        if agg_w is None and hp.aggregation == "weighted_era":
-            # adaptive reliability (paper §5 "future work"): inverse mean
-            # entropy of each client's uploaded soft labels, re-estimated
-            # every round — diffuse (unreliable) uploads get down-weighted
-            ent_k = jnp.mean(entropy(probs), axis=-1)           # (K,)
-            agg_w = 1.0 / (ent_k + 1e-3)
         if masked:
-            pw = participation_weights(
-                ctx.mask, ctx.stale if present(ctx.stale) else None,
-                hp.staleness_decay, base=agg_w)
-            global_logit = (
-                weighted_sa(probs, pw, use_kernel=self.use_kernel)
-                if hp.aggregation == "sa"
-                else weighted_era(probs, pw, hp.temperature,
-                                  use_kernel=self.use_kernel))
+            pw, global_logit, sa_entropy = self._masked_teacher(probs, ctx)
         else:
+            agg_w = self.agg_weights
+            if agg_w is None and hp.aggregation == "weighted_era":
+                # adaptive reliability (paper §5 "future work"): inverse mean
+                # entropy of each client's uploaded soft labels, re-estimated
+                # every round — diffuse (unreliable) uploads get down-weighted
+                ent_k = jnp.mean(entropy(probs), axis=-1)       # (K,)
+                agg_w = 1.0 / (ent_k + 1e-3)
             pw = agg_w
             global_logit = aggregate(probs, hp.aggregation, hp.temperature,
                                      weights=agg_w,
                                      use_kernel=self.use_kernel)
-        sa_entropy = jnp.mean(entropy(jnp.mean(probs, axis=0)))
+            sa_entropy = jnp.mean(entropy(jnp.mean(probs, axis=0)))
         g_entropy = jnp.mean(entropy(global_logit))
 
         # 6. Distillation (clients, Eq. 10; absent clients keep their state)
@@ -284,14 +377,88 @@ class DSFLAlgorithm:
                    "sa_entropy": sa_entropy}
         if pw is not None:
             # normalized per-client aggregation weights (non-scalar: exposed
-            # on `FedEngine.last_metrics`, kept out of the scalar history)
-            metrics["agg_weights"] = pw / jnp.maximum(jnp.sum(pw), 1e-9)
+            # on `FedEngine.last_metrics`, kept out of the scalar history);
+            # pinned total so the diagnostic agrees bitwise across the
+            # dense-masked and sparse programs like every other reduction
+            metrics["agg_weights"] = pw / jnp.maximum(pinned_sum(pw), 1e-9)
         if masked:
             metrics["participants"] = jnp.sum(ctx.mask.astype(jnp.float32))
         new = RoundState(
             clients=ClientState(wk, sk, ouk, odk),
             server=ServerState(wg, sg, odg))
         return new, metrics
+
+    def _sparse_round(self, state: RoundState, ctx: BatchCtx, rng, m: int):
+        """Participation-sparse round: gather the <= m active lanes of the
+        client stack, run "1. Update" / "2. Prediction" / "6. Distillation"
+        vmapped over only the (m, ...) slice, and scatter results back —
+        ~K/m less client compute and activation memory, **bitwise identical**
+        to the dense masked round (pinned by tests/test_engine_scan.py):
+        per-client math sees the same inputs and the same per-client keys,
+        and padding lanes carry exactly zero aggregation weight."""
+        hp = self.hp
+        spec_u, spec_d = self._specs()
+        wk, sk = state.clients.params, state.clients.model_state
+        ouk, odk = state.clients.opt_update, state.clients.opt_distill
+        wg, sg = state.server.params, state.server.model_state
+        odg = state.server.opt_distill
+        K = ctx.x.shape[0]
+        # identical key discipline to the dense round (r3 would feed
+        # `corrupt`, which forces the dense path; split to keep key parity)
+        r1, r2, _r3, r4 = jax.random.split(rng, 4)
+        xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
+
+        idx = active_indices(ctx.mask, m)
+        mask_m = jnp.take(ctx.mask, idx, axis=0)
+        x_m, y_m = gather_clients((ctx.x, ctx.y), idx)
+        wk_m, sk_m, ouk_m, odk_m = gather_clients((wk, sk, ouk, odk), idx)
+
+        # 1. Update — only the gathered lanes; per-client keys gathered out
+        # of the same (K,) split the dense round draws, so every active
+        # client consumes bitwise its dense-path key
+        wk_n, sk_n, ouk_n, up_loss = jax.vmap(
+            lambda w, s, o, xk, yk, rk: local_update(spec_u, w, s, o, xk, yk,
+                                                     rk)
+        )(wk_m, sk_m, ouk_m, x_m, y_m,
+          jnp.take(jax.random.split(r1, K), idx, axis=0))
+        wk_m, sk_m, ouk_m = select_clients(mask_m, (wk_n, sk_n, ouk_n),
+                                           (wk_m, sk_m, ouk_m))
+
+        # 2. Prediction on the active lanes, scattered into exact zeros so
+        # the shared masked aggregation sees its usual (K, n, C) stack
+        probs_m = jax.vmap(lambda w, s: predict_probs(self.apply_fn, w, s, xo)
+                           )(wk_m, sk_m)
+        probs = scatter_zeros(probs_m, K, idx)
+
+        # 3-5. verbatim the dense masked aggregation on the scattered stack
+        pw, global_logit, sa_entropy = self._masked_teacher(probs, ctx)
+        g_entropy = jnp.mean(entropy(global_logit))
+
+        # 6. Distillation (clients) on the gathered lanes
+        wk_n, sk_n, odk_n, d_loss = jax.vmap(
+            lambda w, s, o, rk: local_distill(spec_d, w, s, o, xo,
+                                              global_logit, rk)
+        )(wk_m, sk_m, odk_m, jnp.take(jax.random.split(r2, K), idx, axis=0))
+        wk_m, sk_m, odk_m = select_clients(mask_m, (wk_n, sk_n, odk_n),
+                                           (wk_m, sk_m, odk_m))
+
+        # 6'. server global model (Eq. 11), with its own key r4
+        wg, sg, odg, gd_loss = local_distill(spec_d, wg, sg, odg, xo,
+                                             global_logit, r4)
+
+        clients = ClientState(*scatter_clients(
+            (wk_m, sk_m, ouk_m, odk_m), (wk, sk, ouk, odk), idx))
+        metrics = {"update_loss": masked_mean(scatter_zeros(up_loss, K, idx),
+                                              ctx.mask),
+                   "distill_loss": masked_mean(scatter_zeros(d_loss, K, idx),
+                                               ctx.mask),
+                   "server_distill_loss": gd_loss,
+                   "global_entropy": g_entropy,
+                   "sa_entropy": sa_entropy,
+                   "agg_weights": pw / jnp.maximum(pinned_sum(pw), 1e-9),
+                   "participants": jnp.sum(ctx.mask.astype(jnp.float32))}
+        return RoundState(clients=clients,
+                          server=ServerState(wg, sg, odg)), metrics
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):
         """One client's upload: per-sample probability vectors on o_r."""
@@ -348,6 +515,9 @@ class FDAlgorithm:
         ok = state.clients.opt_update
         K = ctx.x.shape[0]
         masked = present(ctx.mask)
+        if (masked and ctx.active_budget is not None
+                and ctx.active_budget < K):
+            return self._sparse_round(state, ctx, rng, ctx.active_budget)
         tk, owns = jax.vmap(
             lambda w, s, xk, yk: fd_lib.per_label_logits(
                 self.apply_fn, w, s, xk, yk, hp.n_classes))(wk, sk, ctx.x, ctx.y)
@@ -372,6 +542,47 @@ class FDAlgorithm:
         metrics = {"update_loss": (masked_mean(losses, ctx.mask) if masked
                                    else jnp.mean(losses)),
                    "global_logit": tg}        # (C, C), for Fig. 2 analysis
+        return RoundState(clients=ClientState(wk, sk, ok)), metrics
+
+    def _sparse_round(self, state: RoundState, ctx: BatchCtx, rng, m: int):
+        """Participation-sparse FD round: per-class tables and the Eq. 7
+        update run only on the <= m gathered active lanes; the Eq. 5 mean
+        sees scattered zero tables whose ``owns`` rows are False — exactly
+        the lanes the dense masked round multiplies by zero."""
+        hp = self.hp
+        spec = self._spec()
+        wk, sk = state.clients.params, state.clients.model_state
+        ok = state.clients.opt_update
+        K = ctx.x.shape[0]
+        idx = active_indices(ctx.mask, m)
+        mask_m = jnp.take(ctx.mask, idx, axis=0)
+        x_m, y_m = gather_clients((ctx.x, ctx.y), idx)
+        wk_m, sk_m, ok_m = gather_clients((wk, sk, ok), idx)
+
+        tk_m, owns_m = jax.vmap(
+            lambda w, s, xk, yk: fd_lib.per_label_logits(
+                self.apply_fn, w, s, xk, yk, hp.n_classes))(wk_m, sk_m,
+                                                            x_m, y_m)
+        owns_m = jnp.logical_and(owns_m, mask_m.astype(bool)[:, None])
+        # non-gathered lanes scatter as (zeros, False): identical Eq. 5 terms
+        # to the dense masked round's (finite table, False-by-mask) lanes
+        tg, n_own = fd_lib.aggregate_fd(scatter_zeros(tk_m, K, idx),
+                                        scatter_zeros(owns_m, K, idx))
+        rngs_m = jnp.take(jax.random.split(rng, K), idx, axis=0)
+
+        def per_client(w, s, o, xk, yk, tkk, rk):
+            tgt = fd_lib.distill_targets(tg, tkk, n_own, yk)
+            return local_update(spec, w, s, o, xk, yk, rk,
+                                distill_extra=tgt, gamma=hp.gamma)
+
+        wk_n, sk_n, ok_n, losses = jax.vmap(per_client)(wk_m, sk_m, ok_m,
+                                                        x_m, y_m, tk_m, rngs_m)
+        wk_m, sk_m, ok_m = select_clients(mask_m, (wk_n, sk_n, ok_n),
+                                          (wk_m, sk_m, ok_m))
+        wk, sk, ok = scatter_clients((wk_m, sk_m, ok_m), (wk, sk, ok), idx)
+        metrics = {"update_loss": masked_mean(scatter_zeros(losses, K, idx),
+                                              ctx.mask),
+                   "global_logit": tg}
         return RoundState(clients=ClientState(wk, sk, ok)), metrics
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):
@@ -426,16 +637,30 @@ class FedAvgAlgorithm:
         spec = self._spec()
         w0, s0 = state.server.params, state.server.model_state
         K = ctx.x.shape[0]
-        rngs = jax.random.split(rng, K)
+        masked = present(ctx.mask)
+        sparse = (masked and ctx.active_budget is not None
+                  and ctx.active_budget < K)
 
         def per_client(xk, yk, rk):
             opt_state = spec.opt.init(w0)
             return local_update(spec, w0, s0, opt_state, xk, yk, rk)
 
-        wk, sk, _, losses = jax.vmap(per_client)(ctx.x, ctx.y, rngs)
+        if sparse:
+            # client state is ephemeral: only the <= m active lanes train;
+            # their results scatter into exact zeros, which the Eq. 3
+            # weighted average multiplies by an exact-zero weight anyway
+            idx = active_indices(ctx.mask, ctx.active_budget)
+            x_m, y_m = gather_clients((ctx.x, ctx.y), idx)
+            rngs_m = jnp.take(jax.random.split(rng, K), idx, axis=0)
+            wk_m, sk_m, _, losses_m = jax.vmap(per_client)(x_m, y_m, rngs_m)
+            wk = jax.tree.map(lambda a: scatter_zeros(a, K, idx), wk_m)
+            sk = jax.tree.map(lambda a: scatter_zeros(a, K, idx), sk_m)
+            losses = scatter_zeros(losses_m, K, idx)
+        else:
+            rngs = jax.random.split(rng, K)
+            wk, sk, _, losses = jax.vmap(per_client)(ctx.x, ctx.y, rngs)
         weights = (jnp.ones((K,), jnp.float32)
                    if isinstance(ctx.weights, tuple) else ctx.weights)
-        masked = present(ctx.mask)
         if masked:
             # absent clients carry exactly zero weight in the Eq. 3 average
             # (client state is ephemeral in FedAvg, so masking the average IS

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..optim.optimizers import Optimizer
-from .losses import distill_xent, softmax_xent, xent_int_labels
+from .losses import distill_xent, pinned_mean, softmax_xent, xent_int_labels
 
 
 @dataclass(frozen=True)
@@ -38,6 +38,9 @@ def local_update(spec: LocalSpec, params, state, opt_state, x, y, rng,
     aligned with ``x``; when given it adds the FD regularizer (Eq. 7):
     gamma * CE(distill targets) on the *private* inputs."""
     n = x.shape[0]
+    # clamp like local_distill: batch_size > n would give zero batches per
+    # epoch — an empty scan and jnp.mean over zero losses -> NaN metrics
+    bs = min(spec.batch_size, n)
 
     def batch_step(carry, idx):
         params, st, ostate, step = carry
@@ -57,15 +60,15 @@ def local_update(spec: LocalSpec, params, state, opt_state, x, y, rng,
         return (params, ns, ostate, step + 1), loss
 
     def epoch_step(carry, ekey):
-        perm = _epoch_perm(ekey, n, spec.batch_size)
+        perm = _epoch_perm(ekey, n, bs)
         carry, losses = jax.lax.scan(batch_step, carry, perm)
-        return carry, jnp.mean(losses)
+        return carry, pinned_mean(losses)
 
     carry = (params, state, opt_state, jnp.int32(0))
     carry, losses = jax.lax.scan(epoch_step, carry,
                                  jax.random.split(rng, spec.epochs))
     params, state, opt_state, _ = carry
-    return params, state, opt_state, jnp.mean(losses)
+    return params, state, opt_state, pinned_mean(losses)
 
 
 def local_distill(spec: LocalSpec, params, state, opt_state, x_open,
@@ -91,13 +94,13 @@ def local_distill(spec: LocalSpec, params, state, opt_state, x_open,
     def epoch_step(carry, ekey):
         perm = _epoch_perm(ekey, n, bs)
         carry, losses = jax.lax.scan(batch_step, carry, perm)
-        return carry, jnp.mean(losses)
+        return carry, pinned_mean(losses)
 
     carry = (params, state, opt_state, jnp.int32(0))
     carry, losses = jax.lax.scan(epoch_step, carry,
                                  jax.random.split(rng, spec.epochs))
     params, state, opt_state, _ = carry
-    return params, state, opt_state, jnp.mean(losses)
+    return params, state, opt_state, pinned_mean(losses)
 
 
 def predict_probs(apply_fn: Callable, params, state, x, batch_size: int = 0):

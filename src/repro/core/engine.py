@@ -37,6 +37,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..checkpoint import load_pytree, save_pytree
 from .algorithms import BatchCtx, EMPTY, FedAlgorithm, RoundState
@@ -196,16 +197,18 @@ class FedEngine:
         self.history = []
         return self.algo.init(rng, model_init, data)
 
-    def make_ctx(self, data, o_idx=EMPTY, weights=EMPTY) -> BatchCtx:
+    def make_ctx(self, data, o_idx=EMPTY, weights=EMPTY,
+                 active_budget=None) -> BatchCtx:
         open_x = data.open_x if self.algo.uses_open else EMPTY
         return BatchCtx(x=data.x_clients, y=data.y_clients,
-                        open_x=open_x, o_idx=o_idx, weights=weights)
+                        open_x=open_x, o_idx=o_idx, weights=weights,
+                        active_budget=active_budget)
 
     # --------------------------------------------------------------- run ----
     def run(self, state: RoundState, data, rounds: Optional[int] = None,
             weights=EMPTY, log_every: int = 1,
             start_round: Optional[int] = None, chunk_rounds: int = 1,
-            ctx_plan=None) -> RoundState:
+            ctx_plan=None, active_budget: Optional[int] = None) -> RoundState:
         """Run ``rounds`` federated rounds starting at ``start_round``
         (default: ``self.rounds_done``, which ``load_state`` restores from a
         checkpoint).  The per-round RNG chain is fast-forwarded past the
@@ -221,7 +224,14 @@ class FedEngine:
         path — schedulers that can plan a whole chunk a priori pass
         ``ctx_plan`` instead: a dict of per-round BatchCtx field overrides
         (e.g. ``{"mask": (rounds, K), "stale": (rounds, K)}``) consumed by
-        both paths."""
+        both paths.
+
+        ``active_budget=m`` turns masked rounds participation-sparse: the
+        algorithms compute only (at most) m gathered client lanes per round
+        instead of the full K-stack — bitwise identical, ~K/m cheaper.  It
+        is static (BatchCtx metadata), so it composes with ``chunk_rounds``
+        and ``ctx_plan``; the caller guarantees every served mask has at
+        most m participants (`repro.sim` schedulers do, by construction)."""
         hp = self.algo.hp
         rounds = hp.rounds if rounds is None else rounds
         start = self.rounds_done if start_round is None else start_round
@@ -234,6 +244,25 @@ class FedEngine:
                     raise ValueError(
                         f"ctx_plan[{f!r}] covers {_leading_dim(v)} rounds; "
                         f"run() needs {rounds}")
+            mask_plan = ctx_plan.get("mask")
+            if (active_budget is not None and mask_plan is not None
+                    and active_budget < mask_plan.shape[-1]):
+                # the sparse-round contract, enforced loudly while the plan
+                # is still host-side: every round needs 1 <= participants <=
+                # budget.  Overflow would silently skip clients that carry
+                # aggregation weight; an empty round's aggregation falls
+                # back to uniform-over-K, which needs the uploads the
+                # sparse plane never computes.  Checked in numpy — the sim
+                # path calls run() once per fused chunk, and device
+                # reductions here would add blocking host syncs to a loop
+                # whose whole point is one sync per chunk
+                pops = (np.asarray(mask_plan) > 0).sum(axis=-1)
+                lo, hi = int(pops.min()), int(pops.max())
+                if lo < 1 or hi > active_budget:
+                    raise ValueError(
+                        f"active_budget={active_budget} needs 1 <= "
+                        f"participants <= budget every round; ctx_plan "
+                        f"masks have [{lo}, {hi}]")
         rng = jax.random.PRNGKey(hp.seed)
         if start:
             rng = _fast_forward_key(rng, start)
@@ -253,13 +282,15 @@ class FedEngine:
                     f"sync); pass log_every=chunk_rounds to actually fuse",
                     stacklevel=2)
             return self._run_scanned(state, data, rounds, weights, log_every,
-                                     start, rng, chunk, ctx_plan, n_open, n_r)
+                                     start, rng, chunk, ctx_plan, n_open, n_r,
+                                     active_budget)
         fn = None
         for r in range(start, start + rounds):
             rng, rk, ri = jax.random.split(rng, 3)
             o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
                      if self.algo.uses_open else EMPTY)
-            ctx = self.make_ctx(data, o_idx=o_idx, weights=weights)
+            ctx = self.make_ctx(data, o_idx=o_idx, weights=weights,
+                                active_budget=active_budget)
             if ctx_plan is not None:
                 ctx = dataclasses.replace(
                     ctx, **{f: v[r - start] for f, v in ctx_plan.items()})
@@ -298,7 +329,8 @@ class FedEngine:
         return chunk
 
     def _run_scanned(self, state, data, rounds, weights, log_every, start,
-                     rng, chunk, ctx_plan, n_open, n_r) -> RoundState:
+                     rng, chunk, ctx_plan, n_open, n_r,
+                     active_budget=None) -> RoundState:
         r, end = start, start + rounds
         while r < end:
             k = min(chunk, end - r)
@@ -309,7 +341,8 @@ class FedEngine:
             plan = (None if ctx_plan is None else
                     {f: v[r - start:r - start + k]
                      for f, v in ctx_plan.items()})
-            ctx0 = self.make_ctx(data, weights=weights)
+            ctx0 = self.make_ctx(data, weights=weights,
+                                 active_budget=active_budget)
             fn = self._get_chunk(k, n_open, n_r, state, ctx0, plan)
             state, rng, ms = fn(state, ctx0, rng, plan)
             self.last_metrics = {key: v[-1] for key, v in ms.items()}

@@ -33,10 +33,17 @@ def per_label_logits(apply_fn, params, state, x, y, n_classes: int):
 
 def aggregate_fd(tk: jax.Array, present: jax.Array):
     """Eq. 5: class-wise mean over owning clients.
-    tk: (K, C, C), present: (K, C) -> (t_g (C, C), n_owners (C,))."""
-    m = present.astype(F32)[..., None]                      # (K, C, 1)
-    n_own = jnp.sum(present.astype(F32), axis=0)            # (C,)
-    tg = jnp.sum(tk * m, axis=0) / jnp.maximum(n_own[:, None], 1.0)
+    tk: (K, C, C), present: (K, C) -> (t_g (C, C), n_owners (C,)).
+
+    Both cross-client sums are einsum contractions rather than plain
+    reduces so their lane order is context-stable: the participation-sparse
+    FD round and the dense masked round are different XLA programs summing
+    bitwise-identical inputs, and a fused plain reduce is free to
+    reassociate differently in each (see `losses.pinned_sum`)."""
+    m = present.astype(F32)                                 # (K, C)
+    n_own = jnp.einsum("k,kc->c", jnp.ones((m.shape[0],), F32), m)
+    tg = jnp.einsum("kc,kcd->cd", m, tk.astype(F32)) \
+        / jnp.maximum(n_own[:, None], 1.0)
     return tg, n_own
 
 

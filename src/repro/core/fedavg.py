@@ -12,12 +12,16 @@ import jax
 import jax.numpy as jnp
 
 from .client import LocalSpec, local_update
+from .losses import pinned_sum
 
 
 def weighted_average(stacked, weights: jax.Array):
-    """Eq. 3: sum_k (I_k / I) w_k over the leading client axis."""
+    """Eq. 3: sum_k (I_k / I) w_k over the leading client axis.  The weight
+    total is dot-lowered (`losses.pinned_sum`) so the normalization — and
+    with it the whole average — is bitwise identical between the dense
+    masked and participation-sparse round programs."""
     w = weights.astype(jnp.float32)
-    w = w / jnp.sum(w)
+    w = w / pinned_sum(w)
 
     def avg(leaf):
         return jnp.einsum("k,k...->...", w, leaf.astype(jnp.float32)

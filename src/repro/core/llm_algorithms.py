@@ -83,11 +83,14 @@ def _shardings(cfg: ModelConfig, mesh, state: RoundState, ctx: BatchCtx,
     # mirrored only when present so the ctx treedefs match
     mask = rep if not isinstance(ctx.mask, tuple) else EMPTY
     stale = rep if not isinstance(ctx.stale, tuple) else EMPTY
+    # active_budget is pytree *metadata*: it must mirror the real ctx's
+    # value or the sharding pytree's treedef won't match the argument's
+    budget = ctx.active_budget
     if with_open:
         osh = to_named(mesh, batch_specs(ctx.open_x, mesh))
         return st, BatchCtx(x=xsh, open_x=osh, o_idx=rep, mask=mask,
-                            stale=stale)
-    return st, BatchCtx(x=xsh, mask=mask, stale=stale)
+                            stale=stale, active_budget=budget)
+    return st, BatchCtx(x=xsh, mask=mask, stale=stale, active_budget=budget)
 
 
 @dataclass(frozen=True)
@@ -115,7 +118,8 @@ class LLMDSFLAlgorithm:
         new, loss = dsfl_round_step(
             self.cfg, state.clients.params, ctx.x, open_b, self.hp,
             weights=_participation(ctx, self.hp.staleness_decay),
-            mask=ctx.mask if present(ctx.mask) else None)
+            mask=ctx.mask if present(ctx.mask) else None,
+            active_budget=ctx.active_budget)
         return RoundState(clients=ClientState(params=new)), {"loss": loss}
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):
@@ -162,7 +166,8 @@ class LLMFedAvgAlgorithm:
         new, loss = fedavg_round_step(
             self.cfg, state.clients.params, ctx.x, self.hp.lr,
             weights=_participation(ctx, self.hp.staleness_decay),
-            mask=ctx.mask if present(ctx.mask) else None)
+            mask=ctx.mask if present(ctx.mask) else None,
+            active_budget=ctx.active_budget)
         return RoundState(clients=ClientState(params=new)), {"loss": loss}
 
     def upload_payload(self, state: RoundState, ctx: BatchCtx):

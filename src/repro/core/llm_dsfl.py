@@ -24,8 +24,10 @@ import jax.numpy as jnp
 from ..models.api import model_logits
 from ..models.base import ModelConfig
 from .aggregation import era, sa, topk_compress, weighted_era, weighted_sa
-from .algorithms import masked_mean, select_clients
-from .losses import distill_xent, topk_distill_xent, xent_int_labels
+from .algorithms import (active_indices, gather_clients, masked_mean,
+                         scatter_clients, scatter_zeros, select_clients)
+from .losses import (distill_xent, pinned_sum, topk_distill_xent,
+                     xent_int_labels)
 
 
 @dataclass(frozen=True)
@@ -121,7 +123,8 @@ def predict_open_probs(cfg: ModelConfig, params, open_batch):
 
 
 def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
-                    open_batch, hp: LLMDsflHP, weights=None, mask=None):
+                    open_batch, hp: LLMDsflHP, weights=None, mask=None,
+                    active_budget=None):
     """One full DS-FL round over the pod-sharded client axis.
 
     stacked_params: pytree with leading (n_clients,) axis, sharded P("pod",.).
@@ -142,8 +145,22 @@ def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
     decayed to exactly zero still trains and averages into the loss, same
     as the core `algorithms` path.  ``None`` (the default) is the exact
     full-participation path the parity tests pin bit-for-bit.
+
+    ``active_budget=m`` (with ``weights``) runs the participation-sparse
+    round: prediction and the hybrid client step execute on only the m
+    gathered active lanes of the pod-sharded stack, and the gathered
+    uploads scatter into exact zeros before the weighted exchange — a
+    ~K/m client-compute reduction, bitwise identical to the dense
+    ``weights=`` round.  The top-k exchange keeps the dense path (its
+    pinned pod-axis all-gather is shaped by the full client axis).
     """
     from ..models.shardctx import constrain
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if (weights is not None and active_budget is not None
+            and active_budget < K and hp.topk is None):
+        return _dsfl_round_sparse(cfg, stacked_params, private_batches,
+                                  open_batch, hp, weights, mask,
+                                  active_budget)
     probs = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
                      )(stacked_params)                     # (Kc, B, S, V)
     if hp.topk is not None:
@@ -194,6 +211,35 @@ def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
     return new_params, jnp.mean(losses)
 
 
+def _dsfl_round_sparse(cfg: ModelConfig, stacked_params, private_batches,
+                       open_batch, hp: LLMDsflHP, weights, mask,
+                       active_budget: int):
+    """Participation-sparse DS-FL round at pod scale: same gather ->
+    compute -> scatter plane as `algorithms.DSFLAlgorithm._sparse_round`,
+    along the pod-sharded client axis.  Bitwise identical to the dense
+    ``weights=`` round (tests/test_llm_dsfl.py): active lanes see the same
+    per-client math, and the scattered zero lanes multiply against the
+    same exact-zero aggregation weights the dense stack's lanes do."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    act = weights if mask is None else mask
+    idx = active_indices(act, active_budget)
+    act_m = jnp.take(act, idx, axis=0)
+    params_m = gather_clients(stacked_params, idx)
+    batches_m = gather_clients(private_batches, idx)
+
+    probs_m = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
+                       )(params_m)                          # (m, B, S, V)
+    teacher = _aggregate_teacher(scatter_zeros(probs_m, K, idx), hp, weights)
+
+    new_m, losses_m = jax.vmap(
+        lambda p, b: dsfl_client_step(cfg, p, b, open_batch, teacher, hp)
+    )(params_m, batches_m)
+    new_m = select_clients(act_m.astype(jnp.float32) > 0, new_m, params_m)
+    new_params = scatter_clients(new_m, stacked_params, idx)
+    losses = scatter_zeros(losses_m, K, idx)
+    return new_params, masked_mean(losses, act.astype(jnp.float32) > 0)
+
+
 def _aggregate_teacher(probs, hp: LLMDsflHP, weights):
     """sa/era over the client axis; the weighted variants zero out absent
     clients and decay stale ones when the sim supplies ``weights``."""
@@ -207,7 +253,8 @@ def _aggregate_teacher(probs, hp: LLMDsflHP, weights):
 
 
 def fedavg_round_step(cfg: ModelConfig, stacked_params, private_batches,
-                      lr: float, weights=None, mask=None):
+                      lr: float, weights=None, mask=None,
+                      active_budget=None):
     """Benchmark 1 at pod scale: local step then parameter mean over the pod
     axis — its all-reduce bytes = model size (the paper's comparison).
 
@@ -216,10 +263,27 @@ def fedavg_round_step(cfg: ModelConfig, stacked_params, private_batches,
     ephemeral in FedAvg, so masking the average is the whole
     partial-participation round); ``mask`` (K,) names the participants
     whose losses average into the metric even if their weight decayed to
-    zero.  ``None`` is the exact pinned path."""
-    new_params, losses = jax.vmap(
-        lambda p, b: sgd_train_step(cfg, p, b, lr))(stacked_params,
-                                                    private_batches)
+    zero.  ``None`` is the exact pinned path.
+
+    ``active_budget=m`` (with ``weights``) gathers the m active lanes,
+    trains only those, and scatters into exact zeros — the Eq. 3 weighted
+    mean multiplies the zero lanes by the same exact-zero weights the
+    dense round's lanes get, so the result is bitwise identical."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if (weights is not None and active_budget is not None
+            and active_budget < K):
+        act = weights if mask is None else mask
+        idx = active_indices(act, active_budget)
+        new_m, losses_m = jax.vmap(
+            lambda p, b: sgd_train_step(cfg, p, b, lr)
+        )(gather_clients(stacked_params, idx),
+          gather_clients(private_batches, idx))
+        new_params = jax.tree.map(lambda a: scatter_zeros(a, K, idx), new_m)
+        losses = scatter_zeros(losses_m, K, idx)
+    else:
+        new_params, losses = jax.vmap(
+            lambda p, b: sgd_train_step(cfg, p, b, lr))(stacked_params,
+                                                        private_batches)
     if weights is None:
         avg = jax.tree.map(
             lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0,
@@ -228,7 +292,8 @@ def fedavg_round_step(cfg: ModelConfig, stacked_params, private_batches,
         loss = jnp.mean(losses)
     else:
         w = weights.astype(jnp.float32)
-        w = w / jnp.maximum(jnp.sum(w), 1e-9)
+        # dot-lowered total: bitwise-stable across the dense/sparse programs
+        w = w / jnp.maximum(pinned_sum(w), 1e-9)
         avg = jax.tree.map(
             lambda leaf: jnp.einsum("k,k...->...", w,
                                     leaf.astype(jnp.float32)

@@ -1,11 +1,38 @@
 """Loss functions (fp32 statistics).  The distillation loss has a fused
-Pallas path (`repro.kernels.distill_loss`) selected by ``use_kernel``."""
+Pallas path (`repro.kernels.distill_loss`) selected by ``use_kernel``.
+
+The scalar loss means are computed through ``pinned_mean``: XLA
+reassociates a plain fused ``reduce`` differently depending on the
+surrounding program, so the *same* per-sample CE values can mean to
+different last-bit floats in two differently-shaped programs — which would
+break the participation-sparse round's bitwise-parity guarantee (the
+sparse and the dense masked rounds are different programs computing
+identical per-client losses).  A ``dot``-lowered sum is emitted through
+XLA's dot path, whose lane order is context-stable (empirically: every
+einsum/matmul in the round is, only plain reduces wobble), and it batches
+cleanly under ``vmap``."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32
+
+
+def pinned_sum(v):
+    """Context-stable summation: lowered as a dot, not a plain reduce, so
+    two differently-fused programs summing bitwise-identical inputs agree
+    bitwise (see module docstring).  Sums over *all* axes."""
+    v = v.astype(F32).ravel()
+    return jnp.dot(v, jnp.ones_like(v))
+
+
+def pinned_mean(ce, mask=None):
+    """Mean (or mask-weighted mean) of a per-sample loss tensor, with the
+    reduction order pinned across programs (see module docstring)."""
+    if mask is not None:
+        return pinned_sum(ce * mask) / jnp.maximum(pinned_sum(mask), 1.0)
+    return pinned_sum(ce) / ce.size
 
 
 def log_softmax(logits):
@@ -19,10 +46,7 @@ def softmax_xent(logits, labels_onehot, mask=None):
     """Cross-entropy vs hard one-hot or soft targets. logits: (..., C)."""
     ls = log_softmax(logits)
     ce = -jnp.sum(labels_onehot.astype(F32) * ls, axis=-1)
-    if mask is not None:
-        ce = ce * mask
-        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.mean(ce)
+    return pinned_mean(ce, mask)
 
 
 def xent_int_labels(logits, labels, mask=None):
@@ -30,19 +54,20 @@ def xent_int_labels(logits, labels, mask=None):
     ls = log_softmax(logits)
     ce = -jnp.take_along_axis(ls, labels[..., None].astype(jnp.int32),
                               axis=-1)[..., 0]
-    if mask is not None:
-        ce = ce * mask
-        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.mean(ce)
+    return pinned_mean(ce, mask)
 
 
-def distill_xent(student_logits, teacher_probs, mask=None, use_kernel=False):
+def distill_xent(student_logits, teacher_probs, mask=None, use_kernel=False,
+                 interpret=None):
     """KD loss: CE(teacher_probs || softmax(student_logits)).  This is the
     DS-FL "6. Distillation" objective (Eq. 10) with the global logit as soft
-    target."""
+    target.  On the kernel path ``interpret=None`` auto-selects interpret
+    mode on CPU only (the `kernels.ops` convention), so the fused kernel
+    actually compiles on TPU/GPU; pass True/False to force either mode."""
     if use_kernel:
         from repro.kernels import ops as kops
-        return kops.distill_loss(student_logits, teacher_probs, mask)
+        return kops.distill_loss(student_logits, teacher_probs, mask,
+                                 interpret=interpret)
     return softmax_xent(student_logits, teacher_probs, mask)
 
 
@@ -52,10 +77,7 @@ def topk_distill_xent(student_logits, topk_p, topk_i, mask=None):
     ls = log_softmax(student_logits)
     sel = jnp.take_along_axis(ls, topk_i.astype(jnp.int32), axis=-1)
     ce = -jnp.sum(topk_p.astype(F32) * sel, axis=-1)
-    if mask is not None:
-        ce = ce * mask
-        return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.mean(ce)
+    return pinned_mean(ce, mask)
 
 
 def entropy(probs, axis=-1):

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .era_sharpen import resolve_interpret
+
 F32 = jnp.float32
 NEG = -1e30
 
@@ -58,8 +60,12 @@ def _bwd_kernel(z_ref, t_ref, lz_ref, tm_ref, gscale_ref, dz_ref):
 
 
 def distill_loss_fwd_pallas(z: jax.Array, t: jax.Array, block_n: int = 256,
-                            block_v: int = 2048, interpret: bool = True):
-    """z, t: (N, V) -> (per-row loss (N,), logZ (N,))."""
+                            block_v: int = 2048,
+                            interpret: bool | None = None):
+    """z, t: (N, V) -> (per-row loss (N,), logZ (N,)).  ``interpret=None``
+    = auto (the `kernels.ops` convention: interpret on CPU, compiled
+    elsewhere — a hardcoded True would silently interpret on TPU/GPU)."""
+    interpret = resolve_interpret(interpret)
     N, V = z.shape
     bn = min(block_n, N)
     bv = min(block_v, V)
@@ -80,8 +86,11 @@ def distill_loss_fwd_pallas(z: jax.Array, t: jax.Array, block_n: int = 256,
 
 
 def distill_loss_bwd_pallas(z, t, logz, tmass, gscale, block_n: int = 256,
-                            block_v: int = 2048, interpret: bool = True):
-    """Gradient wrt z: gscale * (softmax(z) * tmass - t). gscale: (1,) f32."""
+                            block_v: int = 2048,
+                            interpret: bool | None = None):
+    """Gradient wrt z: gscale * (softmax(z) * tmass - t). gscale: (1,) f32.
+    ``interpret=None`` = auto (CPU -> interpret, else compiled)."""
+    interpret = resolve_interpret(interpret)
     N, V = z.shape
     bn = min(block_n, N)
     bv = min(block_v, V)

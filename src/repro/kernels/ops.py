@@ -54,24 +54,25 @@ def weighted_mean(local_probs: jax.Array, weights: jax.Array,
 
 
 # ------------------------------------------------------------ distill loss ---
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
-def distill_loss_2d(z: jax.Array, t: jax.Array) -> jax.Array:
-    losses, _ = distill_loss_fwd_pallas(z, t, interpret=_interp())
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def distill_loss_2d(z: jax.Array, t: jax.Array,
+                    interpret: bool | None = None) -> jax.Array:
+    losses, _ = distill_loss_fwd_pallas(z, t, interpret=_interp(interpret))
     return jnp.mean(losses)
 
 
-def _dl_fwd(z, t):
-    losses, logz = distill_loss_fwd_pallas(z, t, interpret=_interp())
+def _dl_fwd(z, t, interpret):
+    losses, logz = distill_loss_fwd_pallas(z, t, interpret=_interp(interpret))
     tmass = jnp.sum(t.astype(F32), axis=-1)
     return jnp.mean(losses), (z, t, logz, tmass)
 
 
-def _dl_bwd(res, g):
+def _dl_bwd(interpret, res, g):
     z, t, logz, tmass = res
     n = z.shape[0]
     gscale = jnp.reshape(g.astype(F32) / n, (1,))
     dz = distill_loss_bwd_pallas(z, t, logz, tmass, gscale,
-                                 interpret=_interp())
+                                 interpret=_interp(interpret))
     return dz, None
 
 
@@ -79,16 +80,17 @@ distill_loss_2d.defvjp(_dl_fwd, _dl_bwd)
 
 
 def distill_loss(student_logits: jax.Array, teacher_probs: jax.Array,
-                 mask=None) -> jax.Array:
+                 mask=None, interpret: bool | None = None) -> jax.Array:
     """Arbitrary leading dims; mask unsupported on the kernel path (falls back
-    to the reference implementation when given)."""
+    to the reference implementation when given).  ``interpret=None`` = auto
+    (CPU -> interpret, else the compiled kernel)."""
     if mask is not None:
         from ..core.losses import softmax_xent
         return softmax_xent(student_logits, teacher_probs, mask)
     V = student_logits.shape[-1]
     z = student_logits.reshape(-1, V)
     t = teacher_probs.reshape(-1, V)
-    return distill_loss_2d(z, t)
+    return distill_loss_2d(z, t, interpret)
 
 
 # -------------------------------------------------------------- ssd chunk ----

@@ -46,21 +46,50 @@ class SimRunner:
     cum_bytes: int = 0
     _leg_bytes: Optional[tuple] = None  # cached (up, down) measured bytes
 
-    def _hook(self, plan: RoundPlan):
+    def _hook(self, plan: RoundPlan, budget=None):
         if self.scheduler.idealized:
             return None                  # ctx untouched -> bit-exact engine
         mask = jnp.asarray(plan.mask, jnp.float32)
         stale = jnp.asarray(plan.staleness, jnp.int32)
 
         def on_ctx(r, ctx):
-            return dataclasses.replace(ctx, mask=mask, stale=stale)
+            return dataclasses.replace(ctx, mask=mask, stale=stale,
+                                       active_budget=budget)
 
         return on_ctx
+
+    def _budget(self, active_budget, plans) -> Optional[int]:
+        """Resolve the participation-sparse budget for one engine call.
+        ``"auto"`` takes the scheduler's static bound; an int is trusted
+        (validated against the materialized plans); None keeps the dense
+        masked path.  A budget >= K buys nothing, so it degrades to None."""
+        if active_budget == "auto":
+            active_budget = getattr(self.scheduler, "active_budget", None)
+        if active_budget is None:
+            return None
+        K = self.scheduler.population.n_clients
+        if active_budget >= K:
+            # buys nothing over the dense path — degrade before enforcing
+            # the sparse contract, which only the sparse plane needs
+            return None
+        need = max(int(p.mask.sum()) for p in plans)
+        if need > active_budget:
+            raise ValueError(
+                f"active_budget {active_budget} < {need} scheduled "
+                f"participants — the sparse round would silently skip "
+                f"clients that carry aggregation weight")
+        if min(int(p.mask.sum()) for p in plans) < 1:
+            raise ValueError(
+                "sparse rounds need >= 1 participant per round (an empty "
+                "round's aggregation falls back to uniform-over-K, which "
+                "needs the uploads the sparse plane never computes); pass "
+                "active_budget=None for this schedule")
+        return int(active_budget)
 
     # --------------------------------------------------------------- run ----
     def run(self, state: RoundState, data, rounds: Optional[int] = None,
             weights=EMPTY, log_every: int = 1,
-            chunk_rounds: int = 1) -> RoundState:
+            chunk_rounds: int = 1, active_budget="auto") -> RoundState:
         """Drive ``rounds`` virtual rounds.  ``chunk_rounds=k`` runs the
         fused sim path when the scheduler allows it: sync participation is
         computable a priori from the measured per-leg bytes and the client
@@ -68,7 +97,14 @@ class SimRunner:
         (k, K) mask/stale plan, and fed through the engine's compiled
         ``lax.scan`` as per-step ctx inputs — bitwise identical to the
         per-round path (tests/test_engine_scan.py).  Async scheduling
-        (``plannable=False``) keeps the per-round path."""
+        (``plannable=False``) keeps the per-round path.
+
+        ``active_budget`` drives the participation-sparse round plane:
+        ``"auto"`` (default) takes the scheduler's static participant bound
+        (ceil(fraction*K) for sync rounds, the buffer size M for async), so
+        a 10%-participation fleet computes ~10% of the client stack per
+        round — bitwise identical to the dense masked round.  Pass an int
+        to override or ``None`` to force the dense path."""
         eng = self.engine
         rounds = eng.algo.hp.rounds if rounds is None else rounds
         # per-leg bytes measured once on the encoded payload (shapes are
@@ -89,6 +125,8 @@ class SimRunner:
                     np.random.default_rng([self.seed, r0 + i]),
                     up_bytes, down_bytes) for i in range(k)]
                 n_hist = len(eng.history)
+                budget = (None if self.scheduler.idealized
+                          else self._budget(active_budget, plans))
                 if fused:
                     eng.on_ctx = None
                     ctx_plan = None
@@ -102,9 +140,9 @@ class SimRunner:
                                 jnp.int32)}
                     state = eng.run(state, data, rounds=k, weights=weights,
                                     log_every=log_every, chunk_rounds=k,
-                                    ctx_plan=ctx_plan)
+                                    ctx_plan=ctx_plan, active_budget=budget)
                 else:
-                    eng.on_ctx = self._hook(plans[0])
+                    eng.on_ctx = self._hook(plans[0], budget)
                     state = eng.run(state, data, rounds=1, weights=weights,
                                     log_every=log_every)
                 eng_recs = {rec["round"]: rec

@@ -20,6 +20,7 @@ the same wallclock axis.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -88,6 +89,21 @@ class SyncScheduler:
                 and (self.sampler == "uniform"
                      or bool(np.all(self.population.availability >= 1.0))))
 
+    @property
+    def active_budget(self) -> int:
+        """Static upper bound on per-round participants — the m of the
+        participation-sparse round plane (``BatchCtx.active_budget``).  A
+        sampled cohort is at most ceil(fraction * K); under ``straggler=
+        "admit"`` the previous round's deadline-cut clients (a subset of its
+        cohort) can join on top, so the bound doubles.  Every `RoundPlan`
+        this scheduler emits satisfies ``mask.sum() <= active_budget`` by
+        construction (property-tested in tests/test_sim_props.py)."""
+        K = self.population.n_clients
+        m = min(K, max(1, math.ceil(self.fraction * K)))
+        if self.deadline is not None and self.straggler == "admit":
+            m = min(K, 2 * m)
+        return m
+
     def next_round(self, rng: np.random.Generator, up_bytes: float,
                    down_bytes: float) -> RoundPlan:
         pop = self.population
@@ -140,6 +156,13 @@ class AsyncBufferScheduler:
 
     idealized = False   # masks/staleness are structural in async mode
     plannable = False   # buffered-async rounds stay on the per-round path
+
+    @property
+    def active_budget(self) -> int:
+        """Exactly ``buffer_size`` uploads enter every aggregation, so the
+        sparse round plane's budget is M — FedBuff-style async is the regime
+        where computing only the active clients pays off most (M << K)."""
+        return self.buffer_size
 
     def __post_init__(self):
         K = self.population.n_clients

@@ -1,0 +1,61 @@
+"""Client-local loop regressions: `local_update` must clamp ``batch_size``
+to the private-set size the way `local_distill` always has — ``batch_size >
+n`` used to give zero batches per epoch, an empty scan, and a mean over
+zero losses -> NaN metrics (with the parameters silently never trained)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import LocalSpec, local_distill, local_update
+from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.optim import optimizers as opt_lib
+
+
+def _setup(rng, n):
+    params, state = init_tiny_mlp(rng)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (n, 16, 16, 1))
+    y = jax.random.randint(jax.random.fold_in(rng, 2), (n,), 0, 10)
+    return params, state, x, y
+
+
+def test_local_update_clamps_batch_size_to_n(rng):
+    n = 12
+    params, state, x, y = _setup(rng, n)
+    spec = LocalSpec(apply_tiny_mlp, opt_lib.make("sgd", 0.1), 2,
+                     batch_size=100)          # > n: one clamped batch
+    opt0 = spec.opt.init(params)
+    new_p, _, _, loss = jax.jit(
+        lambda p, s, o, xx, yy, k: local_update(spec, p, s, o, xx, yy, k)
+    )(params, state, opt0, x, y, rng)
+    assert bool(jnp.isfinite(loss)), "batch_size > n must not NaN the loss"
+    # and it actually trains: at least one parameter leaf moved
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_p)))
+    assert moved, "clamped batch must still run update steps"
+
+
+def test_local_update_clamp_matches_explicit_batch_size(rng):
+    """Clamping is exactly ``bs = min(batch_size, n)``: an oversized
+    batch_size produces bitwise the run an explicit batch_size=n does."""
+    n = 12
+    params, state, x, y = _setup(rng, n)
+    outs = []
+    for bs in (n, 10 * n):
+        spec = LocalSpec(apply_tiny_mlp, opt_lib.make("sgd", 0.1), 1, bs)
+        outs.append(local_update(spec, params, state, spec.opt.init(params),
+                                 x, y, rng))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_local_distill_clamp_still_finite(rng):
+    """The pre-existing distill clamp keeps working alongside the new
+    update clamp (same spec, both loops)."""
+    n = 8
+    params, state, x, _ = _setup(rng, n)
+    teacher = jax.nn.softmax(jax.random.normal(rng, (n, 10)), -1)
+    spec = LocalSpec(apply_tiny_mlp, opt_lib.make("sgd", 0.1), 1, 64)
+    _, _, _, loss = local_distill(spec, params, state, spec.opt.init(params),
+                                  x, teacher, rng)
+    assert bool(jnp.isfinite(loss))

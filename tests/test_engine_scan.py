@@ -219,6 +219,166 @@ def test_chunk_factorization_invariance_hypothesis(task):
     check()
 
 
+# -------------------------------------------- participation-sparse rounds ---
+def _mask_plan(seed, rounds=R, k=K, p=0.4):
+    """A random (rounds, K) participation plan (>=1 participant per round)
+    with staleness on the participants; returns (plan, max popcount)."""
+    rs = np.random.default_rng(seed)
+    mask = rs.random((rounds, k)) < p
+    for r in range(rounds):
+        if not mask[r].any():
+            mask[r, rs.integers(k)] = True
+    stale = rs.integers(0, 3, (rounds, k)) * mask
+    plan = {"mask": jnp.asarray(mask, jnp.float32),
+            "stale": jnp.asarray(stale, jnp.int32)}
+    return plan, int(mask.sum(1).max())
+
+
+@pytest.mark.parametrize("kind", ["dsfl_sa", "dsfl_era", "dsfl_weighted_era",
+                                  "fd", "fedavg"])
+def test_sparse_round_bitwise_identical_to_dense_masked(task, kind):
+    """The tentpole pin: computing only the <= m active client lanes
+    (gather -> update/predict/distill -> scatter) changes nothing — not the
+    final state's bits, not a single history float — on the loop path and
+    through the compiled scan."""
+    plan, need = _mask_plan(3)
+    weights = jnp.ones((K,)) if kind == "fedavg" else ()
+    e1, s1 = _run(_algo(kind, task), task, weights=weights, ctx_plan=plan)
+    for budget, chunk in ((need, 1), (need, 3), (min(K - 1, need + 1), 2)):
+        eng = FedEngine(_algo(kind, task))
+        s2 = eng.run(eng.init(_init, task), task, rounds=R, weights=weights,
+                     ctx_plan=plan, chunk_rounds=chunk, active_budget=budget)
+        _assert_states_equal(s1, s2)
+        assert e1.history == eng.history
+
+
+def test_sparse_resume_across_chunk_boundary(task, tmp_path):
+    """save -> load -> sparse chunked run continues the exact key stream:
+    a mid-stream checkpoint of a sparse run resumes bitwise onto the
+    uninterrupted dense masked run."""
+    plan, need = _mask_plan(5)
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    full, s_full = _run(algo, task, ctx_plan=plan)
+
+    first = FedEngine(algo)
+    mid = first.run(first.init(_init, task), task, rounds=3, chunk_rounds=2,
+                    ctx_plan={f: v[:3] for f, v in plan.items()},
+                    active_budget=need)
+    path = os.path.join(tmp_path, "sparse_mid.msgpack")
+    first.save_state(path, mid)
+
+    second = FedEngine(algo)
+    restored = second.load_state(path, algo.init(jax.random.PRNGKey(0),
+                                                 _init, task))
+    s_res = second.run(restored, task, rounds=R - 3, chunk_rounds=4,
+                       ctx_plan={f: v[3:] for f, v in plan.items()},
+                       active_budget=need)
+    _assert_states_equal(s_full, s_res)
+    assert second.history == full.history
+
+
+def test_sparse_round_hypothesis_any_mask_stale_budget(task):
+    """Property: for ANY participation plan, staleness vector and budget
+    m >= popcount(mask), the sparse round is bitwise identical to the dense
+    masked round — including through a save/load/resume at an arbitrary
+    chunk boundary."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    dense_eng = FedEngine(algo)     # shared jit caches across examples
+    sparse_eng = FedEngine(algo)
+
+    @given(st.integers(0, 2**31 - 1), st.data())
+    @settings(deadline=None, max_examples=6,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(seed, data):
+        import tempfile
+        plan, need = _mask_plan(seed)
+        budget = data.draw(st.integers(need, K), label="budget")
+        chunk = data.draw(st.integers(1, 4), label="chunk")
+        cut = data.draw(st.integers(1, R - 1), label="resume_at")
+        s1 = dense_eng.run(dense_eng.init(_init, task), task, rounds=R,
+                           ctx_plan=plan)
+        state = sparse_eng.run(sparse_eng.init(_init, task), task,
+                               rounds=cut, chunk_rounds=chunk,
+                               ctx_plan={f: v[:cut] for f, v in plan.items()},
+                               active_budget=budget)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "cut.msgpack")
+            sparse_eng.save_state(path, state)
+            state = sparse_eng.load_state(path, state)
+        s2 = sparse_eng.run(state, task, rounds=R - cut, chunk_rounds=chunk,
+                            ctx_plan={f: v[cut:] for f, v in plan.items()},
+                            active_budget=budget)
+        _assert_states_equal(s1, s2)
+        assert dense_eng.history == sparse_eng.history
+
+    check()
+
+
+def test_sim_runner_auto_budget_is_bitwise_and_sparse(task):
+    """`SimRunner` derives the budget from the scheduler (`"auto"`): a
+    25%-participation sync fleet runs the sparse plane and matches the
+    forced-dense run bitwise — state, engine history, sim ledger."""
+    K8, R8 = 8, 4
+    task8 = build_image_task(seed=1, K=K8, n_private=160, n_open=80,
+                             n_test=40, distribution="non_iid")
+
+    def make(active_budget):
+        eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+        pop = ClientPopulation.lognormal(3, K8, compute_sigma=0.8)
+        sched = SyncScheduler(pop, fraction=0.25, straggler="drop")
+        assert sched.active_budget == 2
+        runner = SimRunner(eng, sched, seed=0)
+        state = runner.run(eng.init(_init, task8), task8, rounds=R8,
+                           active_budget=active_budget)
+        return runner, state
+
+    r1, s1 = make(None)          # forced dense masked
+    r2, s2 = make("auto")        # sparse, budget from the scheduler
+    _assert_states_equal(s1, s2)
+    assert r1.engine.history == r2.engine.history
+    assert r1.history.records == r2.history.records
+    # the budget actually reached the jitted round: active_budget is ctx
+    # *metadata*, so the sparse engine's cache keys (treedefs) must differ
+    # from the dense engine's — identical keys would mean the budget was
+    # silently dropped before the jit
+    assert set(r2.engine._round_cache) != set(r1.engine._round_cache)
+
+
+def test_sparse_plan_contract_enforced_loudly(task):
+    """`run(active_budget=...)` rejects plans that break the sparse-round
+    contract: a zero-participant round (its aggregation falls back to
+    uniform-over-K, needing uploads the sparse plane skips) or a round
+    with more participants than the budget (those clients would silently
+    keep stale state while still carrying aggregation weight)."""
+    mask = np.ones((R, K), np.float32)
+    mask[1] = [1, 1, 1, 0]                   # 3 participants at round 2
+    plan = {"mask": jnp.asarray(mask)}
+    empty = {"mask": jnp.asarray(mask).at[2].set(0.0)}
+    for bad, budget in ((empty, K - 1), (plan, 2)):
+        eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+        state = eng.init(_init, task)
+        with pytest.raises(ValueError, match="participants"):
+            eng.run(state, task, rounds=R, ctx_plan=bad,
+                    active_budget=budget)
+
+
+def test_sim_runner_rejects_too_small_budget(task):
+    """An explicit budget below the scheduled participant count must fail
+    loudly — the sparse round would silently skip weighted clients."""
+    K8 = 8
+    task8 = build_image_task(seed=1, K=K8, n_private=160, n_open=80,
+                             n_test=40, distribution="non_iid")
+    eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    pop = ClientPopulation.lognormal(3, K8)
+    runner = SimRunner(eng, SyncScheduler(pop, fraction=0.5,
+                                          straggler="drop"), seed=0)
+    with pytest.raises(ValueError, match="active_budget"):
+        runner.run(eng.init(_init, task8), task8, rounds=1, active_budget=1)
+
+
 # ------------------------------------------------------ RNG fast-forward ----
 def test_fast_forward_key_matches_host_loop_bitwise(rng):
     """The satellite pin: the jitted device-side fast-forward produces

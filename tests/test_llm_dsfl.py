@@ -69,6 +69,33 @@ def test_microbatch_accumulation_matches_full_batch(rng):
                                    atol=5e-2, rtol=1e-2)
 
 
+def test_sparse_round_bitwise_matches_dense_weights_path(rng):
+    """Participation-sparse pod rounds: ``active_budget=1`` on a 2-pod
+    fleet (one absent client) computes half the client stack and is
+    bitwise identical to the dense ``weights=`` round — for DS-FL and for
+    the FedAvg benchmark twin."""
+    stacked, private, open_b = make_setup(rng)
+    hp = LLMDsflHP(lr=5e-3)
+    mask = jnp.asarray([1.0, 0.0])
+    w = mask * 0.7
+
+    d = jax.jit(lambda p, pb, ob: dsfl_round_step(
+        CFG, p, pb, ob, hp, weights=w, mask=mask))(stacked, private, open_b)
+    s = jax.jit(lambda p, pb, ob: dsfl_round_step(
+        CFG, p, pb, ob, hp, weights=w, mask=mask, active_budget=1))(
+        stacked, private, open_b)
+    for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    d = jax.jit(lambda p, pb: fedavg_round_step(
+        CFG, p, pb, 1e-3, weights=w, mask=mask))(stacked, private)
+    s = jax.jit(lambda p, pb: fedavg_round_step(
+        CFG, p, pb, 1e-3, weights=w, mask=mask, active_budget=1))(
+        stacked, private)
+    for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_predict_open_probs_is_distribution(rng):
     params = model_init(CFG, rng)
     open_b = lm_open_batch(rng, 2, 16, CFG.vocab)

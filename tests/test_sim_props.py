@@ -12,7 +12,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import aggregation as agg
-from repro.sim import ClientPopulation, SyncScheduler
+from repro.core.algorithms import active_indices
+from repro.sim import AsyncBufferScheduler, ClientPopulation, SyncScheduler
 
 SETTINGS = dict(deadline=None, max_examples=30,
                 suppress_health_check=[HealthCheck.too_slow])
@@ -72,6 +73,57 @@ def test_staleness_decay_only_shrinks_weights(pm, decay, max_stale, seed):
     np.testing.assert_array_equal(
         np.asarray(agg.participation_weights(m, all_stale, 0.0)),
         np.asarray(m))
+
+
+@given(probs_and_mask(), st.integers(0, 8))
+@settings(**SETTINGS)
+def test_active_indices_contract(pm, extra):
+    """The sparse plane's gather indices: participants first in ascending
+    client order, padding lanes distinct non-participants — so the scatter
+    back never collides and padding results are select_clients-discarded."""
+    _, mask = pm
+    K = mask.shape[0]
+    need = int(mask.sum())
+    m = min(K, need + extra)
+    idx = np.asarray(active_indices(jnp.asarray(mask, jnp.float32), m))
+    assert idx.shape == (m,)
+    assert len(np.unique(idx)) == m                       # no collisions
+    np.testing.assert_array_equal(idx[:need], np.flatnonzero(mask))
+    assert not mask[idx[need:]].any()                     # padding: absent
+
+
+@st.composite
+def scheduler_cfg(draw, max_k=12):
+    K = draw(st.integers(2, max_k))
+    fraction = draw(st.floats(0.05, 1.0))
+    deadline = draw(st.one_of(st.none(), st.floats(0.5, 50.0)))
+    straggler = draw(st.sampled_from(["drop", "admit"]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return K, fraction, deadline, straggler, seed
+
+
+@given(scheduler_cfg(), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_schedulers_never_exceed_active_budget(cfg, rounds):
+    """The sparse-round contract the schedulers guarantee by construction:
+    every emitted RoundPlan has at most ``active_budget`` participants —
+    for sync drop/admit rounds under any deadline, and for buffered async
+    (where the budget is exactly the buffer size M)."""
+    K, fraction, deadline, straggler, seed = cfg
+    pop = ClientPopulation.lognormal(seed % 1000, K, compute_sigma=0.8)
+    sched = SyncScheduler(pop, fraction=fraction, deadline=deadline,
+                          straggler=straggler)
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        plan = sched.next_round(rng, 1e4, 1e4)
+        assert plan.mask.sum() <= sched.active_budget
+
+    asched = AsyncBufferScheduler(pop, buffer_size=1 + seed % K,
+                                  jitter_sigma=0.3)
+    assert asched.active_budget == asched.buffer_size
+    for _ in range(rounds):
+        plan = asched.next_round(rng, 1e4, 1e4)
+        assert plan.mask.sum() <= asched.active_budget
 
 
 @st.composite
