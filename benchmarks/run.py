@@ -24,6 +24,7 @@ BENCHES = [
     ("table4", "benchmarks.poisoning"),          # model poisoning
     ("ttacc", "benchmarks.time_to_accuracy"),    # sim: acc vs wallclock/bytes
     ("engine", "benchmarks.engine_bench"),       # loop-vs-scan + weighted ERA
+    ("serve", "benchmarks.serve_bench"),         # continuous batching + swap
     ("kernels", "benchmarks.kernels_bench"),     # Pallas kernels
     ("roofline", "benchmarks.roofline_report"),  # dry-run roofline table
 ]

@@ -1,0 +1,201 @@
+"""Serving benchmark: continuous-batching latency/throughput grid + live
+weight hot-swap from a training `FedEngine`.
+
+Grid: `repro.serve.ServeEngine` under the deterministic open-loop load
+generator (`repro.serve.loadgen` — seeded, virtual-time, so the latency
+percentiles are bit-reproducible across hosts) for >= 2 batch-slot counts
+x >= 2 request rates.  Each cell reports p50/p99 request latency and
+time-to-first-token in virtual seconds, throughput in generated tokens per
+virtual second (and per wall second for a real-hardware number), and exact
+shed accounting.  One engine per slot count, `reset()` between rates: the
+decode step compiles once per slot count and the jit cache counts are
+recorded to prove it.
+
+Swap: a train-while-serving smoke — an LLM DS-FL `FedEngine` run with a
+`WeightSync` attached hot-swaps the server's weights at every round
+boundary; the measured swap latency (checkpointed params -> serving
+buffers, block_until_ready) and the version stamps observed on responses
+before/after land in the report.
+
+Emits ``BENCH_serve.json`` (cwd) and returns CSV rows for `benchmarks.run`
+(key ``serve``).
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI tier
+  PYTHONPATH=src python -m benchmarks.serve_bench           # fuller grid
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import FedEngine
+from repro.core.llm_algorithms import LLMDSFLAlgorithm
+from repro.core.llm_dsfl import LLMDsflHP
+from repro.data.pipeline import build_lm_task
+from repro.models.api import model_init
+from repro.serve import (AdmissionQueue, LoadSpec, Request, ServeEngine,
+                         attach, run_load)
+
+OUT_JSON = "BENCH_serve.json"
+ARCH = "qwen1.5-4b"
+BUCKETS = (8, 16, 32)
+BUDGET = 64
+STEP_COST = 0.01      # virtual seconds per decode step
+PREFILL_COST = 0.05   # virtual seconds per prefill-insert
+
+
+def bench_grid(fast: bool) -> dict:
+    """Latency/throughput for every (slots, rate) cell.  The high-rate cells
+    deliberately exceed the virtual service capacity so the queue's
+    timeout/shed policy shows up in the numbers instead of an unbounded
+    backlog."""
+    slot_counts = (2, 4) if fast else (2, 4, 8)
+    rates = (4.0, 16.0) if fast else (4.0, 16.0, 64.0)
+    n_requests = 32 if fast else 128
+
+    cfg = get_config(ARCH).smoke()
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    cells = {}
+    for slots in slot_counts:
+        engine = ServeEngine(cfg, params, slots=slots, seq_budget=BUDGET,
+                             buckets=BUCKETS)
+        # warmup: compile the decode step and every prefill bucket, so cell
+        # wall-times measure steady-state serving, not XLA
+        for i, n in enumerate(BUCKETS):
+            while not engine.free_slots():
+                engine.step()
+            engine.insert(Request(id=-1 - i, tokens=tuple(range(1, n + 1)),
+                                  max_new_tokens=1))
+        while engine.n_active:
+            engine.step()
+        engine.pop_completed()
+        for rate in rates:
+            engine.reset()
+            queue = AdmissionQueue(buckets=BUCKETS, timeout=2.0,
+                                   max_queue=4 * slots)
+            spec = LoadSpec(n_requests=n_requests, rate=rate,
+                            prompt_len=(4, 40), max_new=(4, 12),
+                            vocab=cfg.vocab, seed=17)
+            rep = run_load(engine, queue, spec,
+                           step_cost=STEP_COST, prefill_cost=PREFILL_COST)
+            rep.pop("responses")
+            assert rep["completed"] + rep["shed"] == n_requests, rep
+            cells[f"slots{slots}_rate{rate:g}"] = {
+                "slots": slots, "rate": rate, "n_requests": n_requests,
+                **{k: v for k, v in rep.items()}}
+        # the whole rate sweep rode one decode-step compile
+        assert engine.compile_counts()["step"] == 1, engine.compile_counts()
+    return {"arch": ARCH, "backend": jax.default_backend(),
+            "step_cost_virtual_s": STEP_COST,
+            "prefill_cost_virtual_s": PREFILL_COST, "cells": cells}
+
+
+def bench_swap(fast: bool) -> dict:
+    """Train-while-serving: measured hot-swap latency from a live FedEngine
+    LLM DS-FL run, plus the version stamps a client actually observes."""
+    K, B, S = 2, 4, 32
+    rounds = 2 if fast else 4
+    cfg = get_config(ARCH).smoke()
+    task = build_lm_task(seed=0, K=K, batch=B, seq=S, vocab=cfg.vocab)
+    hp = LLMDsflHP(lr=5e-3, rounds=rounds, seed=0, open_batch=B)
+    algo = LLMDSFLAlgorithm(cfg, hp)
+    stacked = jax.vmap(lambda k: model_init(cfg, k))(
+        jax.random.split(jax.random.PRNGKey(1), K))
+    fed = FedEngine(algo)
+    state = algo.init_from(stacked)
+
+    srv = ServeEngine(cfg, model_init(cfg, jax.random.PRNGKey(2)),
+                      slots=2, seq_budget=BUDGET, buckets=BUCKETS)
+    rng = np.random.default_rng(5)
+    prompt = tuple(int(x) for x in rng.integers(0, cfg.vocab, size=12))
+
+    def one_response(rid):
+        srv.insert(Request(id=rid, tokens=prompt, max_new_tokens=4))
+        while srv.n_active:
+            srv.step()
+        (r,) = srv.pop_completed()
+        return r
+
+    v_before = one_response(0).weights_version
+    compiles_before = srv.compile_counts()
+    sync = attach(fed, srv, algo)
+    t0 = time.perf_counter()
+    fed.run(state, task, rounds=rounds)
+    train_wall = time.perf_counter() - t0
+    v_after = one_response(1).weights_version
+
+    swaps_ms = [1e3 * dt for _, dt in sync.swap_log]
+    return {"arch": ARCH, "clients": K, "rounds": rounds,
+            "train_wall_s": train_wall,
+            "n_swaps": len(sync.swap_log),
+            "swap_ms_mean": float(np.mean(swaps_ms)),
+            "swap_ms_max": float(np.max(swaps_ms)),
+            "swap_rounds": [r for r, _ in sync.swap_log],
+            "version_before": v_before, "version_after": v_after,
+            "recompiles_from_swap":
+                srv.compile_counts() != compiles_before}
+
+
+def run(fast: bool = True):
+    """benchmarks.run entry: (name, us_per_call, derived) rows +
+    BENCH_serve.json side effect."""
+    grid = bench_grid(fast)
+    swap = bench_swap(fast)
+    with open(OUT_JSON, "w") as f:
+        json.dump({"grid": grid, "swap": swap}, f, indent=2)
+
+    rows = []
+    for key, c in grid["cells"].items():
+        # us_per_call column = measured wall time per generated token
+        tok_us = (1e6 * c["wall_s"] / c["tokens"]) if c["tokens"] else -1.0
+        rows.append((f"serve_{key}", tok_us,
+                     f"p50={c['latency_p50_s']:.3f}s "
+                     f"p99={c['latency_p99_s']:.3f}s(virtual) "
+                     f"tok/s={c['throughput_tok_per_virtual_s']:.1f} "
+                     f"shed={c['shed']}/{c['n_requests']}"))
+    rows.append(("serve_weight_swap", 1e3 * swap["swap_ms_mean"],
+                 f"max={swap['swap_ms_max']:.1f}ms n={swap['n_swaps']} "
+                 f"v{swap['version_before']}->v{swap['version_after']} "
+                 f"recompiles={swap['recompiles_from_swap']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: 2x2 grid, 32 requests/cell, 2 rounds of "
+                         "train-while-serving; asserts the report is "
+                         "complete and swap-free of recompiles")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(fast=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    with open(OUT_JSON) as f:
+        bench = json.load(f)
+    cells, swap = bench["grid"]["cells"], bench["swap"]
+    print(f"wrote {OUT_JSON}: {len(cells)} grid cells, "
+          f"{swap['n_swaps']} swaps ({swap['swap_ms_mean']:.1f} ms mean)")
+    if args.smoke:
+        slot_counts = {c["slots"] for c in cells.values()}
+        rate_counts = {c["rate"] for c in cells.values()}
+        assert len(slot_counts) >= 2 and len(rate_counts) >= 2, (
+            f"grid too small: slots={slot_counts} rates={rate_counts}")
+        for key, c in cells.items():
+            assert c["completed"] + c["shed"] == c["n_requests"], (key, c)
+            assert c["completed"] == 0 or c["latency_p99_s"] >= \
+                c["latency_p50_s"], (key, c)
+        assert swap["n_swaps"] >= 2, swap
+        assert not swap["recompiles_from_swap"], swap
+        assert swap["version_after"] == swap["rounds"], swap
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

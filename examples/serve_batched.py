@@ -1,5 +1,8 @@
-"""Batched-request serving demo: prefill a batch of prompts, then greedy
-decode with ring-buffer KV caches (dense) or O(1) SSM state (mamba).
+"""Batched-request serving demo, now on the `repro.serve` subsystem:
+prompts are admitted through an `AdmissionQueue` into a slot-based
+continuous-batching `ServeEngine` (ring-buffer KV caches for dense,
+O(1) SSM state for mamba) — see ROADMAP.md "Serving" for the API and
+`repro.launch.serve --lockstep` for the old whole-batch baseline.
 
   PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b
 """

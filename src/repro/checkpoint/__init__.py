@@ -1,1 +1,2 @@
 from .msgpack_ckpt import load_pytree, save_pytree  # noqa
+from .treecheck import assert_tree_compatible, tree_mismatches  # noqa

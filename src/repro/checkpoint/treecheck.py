@@ -1,0 +1,61 @@
+"""Pytree compatibility checking with *named* errors.
+
+Loading a checkpoint from a different architecture/config into a live
+engine used to surface as a raw pytree error (wrong leaf count) or — worse —
+unflatten silently and explode later inside a jit with a shape mismatch.
+Both `FedEngine.load_state` and the serving hot-swap path
+(`repro.serve.ServeEngine.swap_weights`) route through these helpers so the
+failure names the offending leaves instead.
+"""
+from __future__ import annotations
+
+import jax
+
+_MAX_NAMED = 8   # cap the error listing; a different arch mismatches ~everything
+
+
+def _path_str(path) -> str:
+    """'clients.params.embed.w'-style rendering of a KeyPath."""
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(f"[{p.idx}]")
+        else:
+            out.append(str(p))
+    return ".".join(out) or "<root>"
+
+
+def tree_mismatches(like, tree) -> list[str]:
+    """Human-readable differences between ``tree`` and the reference
+    ``like``: structure first, then per-leaf shape/dtype diffs (paths named
+    from ``like``).  Empty list == fully compatible."""
+    like_leaves, like_def = jax.tree_util.tree_flatten_with_path(like)
+    leaves, tdef = jax.tree_util.tree_flatten(tree)
+    if jax.tree_util.tree_structure(like) != tdef:
+        msgs = [f"tree structure differs: expected {len(like_leaves)} leaves "
+                f"({like_def}), got {len(leaves)} leaves ({tdef})"]
+        return msgs
+    msgs = []
+    for (path, a), b in zip(like_leaves, leaves):
+        a_shape, b_shape = tuple(a.shape), tuple(b.shape)
+        a_dt, b_dt = str(a.dtype), str(b.dtype)
+        if a_shape != b_shape or a_dt != b_dt:
+            msgs.append(f"{_path_str(path)}: expected {a_shape} {a_dt}, "
+                        f"got {b_shape} {b_dt}")
+    if len(msgs) > _MAX_NAMED:
+        msgs = msgs[:_MAX_NAMED] + [f"... and {len(msgs) - _MAX_NAMED} more"]
+    return msgs
+
+
+def assert_tree_compatible(like, tree, what: str = "pytree") -> None:
+    """Raise ``ValueError`` naming every mismatched leaf if ``tree`` does not
+    match ``like`` in structure, leaf shapes, and leaf dtypes."""
+    msgs = tree_mismatches(like, tree)
+    if msgs:
+        raise ValueError(
+            f"{what} does not match the expected pytree "
+            f"(same arch/config?):\n  " + "\n  ".join(msgs))

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint import load_pytree, save_pytree
+from ..checkpoint import assert_tree_compatible, load_pytree, save_pytree
 from .algorithms import BatchCtx, EMPTY, FedAlgorithm, RoundState
 # re-exported so new-API callers need only this module (the implementation
 # lives with the reference engine)
@@ -81,12 +81,21 @@ class FedEngine:
     buffers to the jit (halves peak params memory for the LLM algorithms).
     ``rounds_done`` counts completed rounds; it is checkpointed by
     ``save_state`` and restored by ``load_state`` so a resumed ``run``
-    continues the per-round RNG chain automatically."""
+    continues the per-round RNG chain automatically.
+
+    ``on_chunk(rounds_done, state) -> None`` is a pure *observer* called
+    whenever a freshly-computed state lands on the host: after every chunk
+    on the scanned path, after every round on the loop path.  Unlike
+    ``on_round``/``on_ctx`` it cannot rewrite the state, so it does NOT
+    force the per-round loop — `repro.serve.swap` uses it to hot-swap a
+    running server's weights at ``chunk_rounds`` boundaries while the
+    training stream stays fully fused."""
     algo: FedAlgorithm
     eval_fn: Optional[Callable] = None
     codec: Codec = field(default_factory=DenseF32Codec)
     on_round: Optional[Callable] = None
     on_ctx: Optional[Callable] = None
+    on_chunk: Optional[Callable] = None
     mesh: Optional[Any] = None
     donate_state: bool = False
     history: list = field(default_factory=list)
@@ -310,6 +319,8 @@ class FedEngine:
                 state = self.on_round(r, state)
             self.last_metrics = m
             self.rounds_done = r + 1
+            if self.on_chunk is not None:
+                self.on_chunk(self.rounds_done, state)
             if (r + 1) % log_every == 0:
                 rec = {"round": r + 1,
                        **{k: float(v) for k, v in m.items()
@@ -360,6 +371,8 @@ class FedEngine:
                 self.history.append(rec)
             r += k
             self.rounds_done = r
+            if self.on_chunk is not None:
+                self.on_chunk(self.rounds_done, state)
         return state
 
     # -------------------------------------------------------- comm bytes ----
@@ -423,7 +436,16 @@ class FedEngine:
             raise ValueError(f"checkpoint is for {tag!r}, "
                              f"engine runs {self.algo.name!r}")
         treedef = jax.tree_util.tree_structure(like)
+        n_like = treedef.num_leaves
+        if len(raw["leaves"]) != n_like:
+            raise ValueError(
+                f"checkpoint {path!r} holds {len(raw['leaves'])} leaves but "
+                f"the engine's state has {n_like} — it was saved from a "
+                f"different arch/config than this {self.algo.name!r} state")
         state = jax.tree_util.tree_unflatten(treedef, raw["leaves"])
+        # fail HERE, naming the mismatched leaves, instead of later inside a
+        # jitted round with an opaque XLA shape error
+        assert_tree_compatible(like, state, what=f"checkpoint {path!r}")
         if shardings is not None:
             state = jax.tree.map(lambda a, s: jax.device_put(a, s),
                                  state, shardings)

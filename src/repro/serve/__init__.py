@@ -1,0 +1,6 @@
+"""Continuous-batching inference with live weight hot-swap from the
+federated trainer.  See ROADMAP.md "Serving" for the quickstart."""
+from .engine import ServeEngine, jit_cache_size  # noqa
+from .loadgen import LoadSpec, draw_arrivals, run_load, summarize  # noqa
+from .queue import AdmissionQueue, Request, Response, bucket_of  # noqa
+from .swap import WeightSync, attach, swap_from_checkpoint  # noqa

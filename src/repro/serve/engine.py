@@ -1,0 +1,291 @@
+"""Slot-based continuous-batching inference engine.
+
+`ServeEngine` holds a fixed-capacity decode batch — ``slots`` lanes of the
+existing ring-buffer KV / O(1) SSM decode cache (`models.api`) — and drives
+it with exactly two kinds of compiled program:
+
+  * one **decode step** for all slots at once: per-slot token and position,
+    vmapped over the slot axis of the batched cache, greedy argmax on
+    device.  The slot count is static and free slots simply compute garbage
+    lanes (the same static-shape discipline as `BatchCtx.active_budget`),
+    so admitting and evicting requests never recompiles — one compile
+    serves the server's whole lifetime, pinned by tests/test_serve.py.
+  * one **prefill-insert** per prompt-length bucket: prefill the largest
+    bucket-length *prefix* of the prompt in a single full-sequence shot,
+    write the resulting one-request cache into the claimed slot
+    (``dynamic_update_slice`` along the slot axis, slot index traced), and
+    feed the short prompt tail through the normal decode step as forced
+    tokens.  No prompt padding ever enters the model, so a request decodes
+    **token-identically** to serving it alone; the bucket set only bounds
+    how many prefill programs get compiled.
+
+Per-slot bookkeeping (prompt tail, generated tokens, timestamps) is plain
+host Python: the device work per step is one dispatch returning the (N,)
+argmax tokens — the host sync serving must pay anyway to emit tokens.
+
+Weights are swapped live via ``swap_weights`` (see `repro.serve.swap` for
+the `FedEngine` hook): treedefs/shapes must match the current serving
+params (checked, mismatches named), the old buffers are donated to the
+swap jit so the new weights land in their storage, and a version counter
+is stamped onto every `Response` so callers can tell which federated
+round's distilled model produced their tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import assert_tree_compatible
+from ..models.api import model_decode_step, model_init_cache, model_prefill
+from ..models.base import ModelConfig
+from .queue import Request, Response, bucket_of
+
+DEFAULT_BUCKETS = (16, 32, 64, 128)
+
+
+def jit_cache_size(fn) -> int:
+    """Number of programs a jitted callable has compiled (-1 if the jax
+    version hides it).  The no-recompile-after-warmup guarantee is asserted
+    through this."""
+    try:
+        return fn._cache_size()
+    except Exception:  # pragma: no cover - older/newer jax without the API
+        return -1
+
+
+@dataclass
+class _SlotTask:
+    """Host-side state of one occupied slot."""
+    req: Request
+    pending: list                       # prompt-tail tokens not yet fed
+    generated: list = field(default_factory=list)
+    admitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+
+
+class ServeEngine:
+    """Continuous-batching greedy decoder over a fixed slot budget.
+
+    ``seq_budget`` caps prompt + generation per request (it sizes the
+    ring-buffer KV cache, so staying under it keeps full-context exactness).
+    ``buckets`` are the compiled prefill lengths (see module docstring);
+    prompts shorter than every bucket prefill at their exact length, each
+    distinct short length costing one extra compile.
+
+    Token-only architectures (dense / moe / ssm / hybrid); the audio and
+    vlm stubs need modality inputs a prompt doesn't carry.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 seq_budget: int = 128,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 eos_id: Optional[int] = None, version: int = 0):
+        if cfg.arch_type in ("vlm", "audio"):
+            raise NotImplementedError(
+                f"ServeEngine serves token-only archs; {cfg.arch_type!r} "
+                "needs modality inputs per request")
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.cfg = cfg
+        self.params = params
+        self.slots = int(slots)
+        self.seq_budget = int(seq_budget)
+        self.buckets = tuple(sorted(b for b in buckets
+                                    if b <= self.seq_budget))
+        self.eos_id = eos_id
+        self.version = int(version)
+
+        self.cache = model_init_cache(cfg, params, self.slots, self.seq_budget)
+        self.tok = np.zeros((self.slots,), np.int32)
+        self.pos = np.zeros((self.slots,), np.int32)
+        self.tasks: list = [None] * self.slots
+        self.completed: list = []       # drained by pop_completed()
+        self.n_steps = 0
+        self.n_inserts = 0
+        self.n_swaps = 0
+
+        self._step_fn = self._build_step()
+        self._prefill_fns: dict = {}    # prefill length -> jitted insert
+
+    # -------------------------------------------------------- compiled fns ---
+    def _build_step(self):
+        cfg = self.cfg
+
+        def one(params, cache_i, tok_i, pos_i):
+            cache_i = jax.tree.map(lambda a: jnp.expand_dims(a, 1), cache_i)
+            logits, nc = model_decode_step(cfg, params, cache_i,
+                                           tok_i[None], pos_i)
+            return (jnp.argmax(logits[0]).astype(jnp.int32),
+                    jax.tree.map(lambda a: jnp.squeeze(a, axis=1), nc))
+
+        def step(params, cache, tok, pos):
+            # vmap over the slot axis (axis 1 of every cache leaf: leaves are
+            # (n_blocks, slots, ...)); each lane sees its own position, so
+            # slots at different depths decode in the same dispatch
+            return jax.vmap(one, in_axes=(None, 1, 0, 0),
+                            out_axes=(0, 1))(params, cache, tok, pos)
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    def _build_prefill(self, n: int):
+        cfg, budget = self.cfg, self.seq_budget
+
+        def prefill_insert(params, cache, toks, slot):
+            logits, one = model_prefill(cfg, params, {"tokens": toks}, budget)
+            cache = jax.tree.map(
+                lambda full, c1: jax.lax.dynamic_update_slice_in_dim(
+                    full, c1.astype(full.dtype), slot, axis=1), cache, one)
+            return jnp.argmax(logits[0]).astype(jnp.int32), cache
+
+        del n   # the compile is keyed by toks.shape; n only names the cache
+        return jax.jit(prefill_insert, donate_argnums=(1,))
+
+    def reset(self) -> None:
+        """Drop all in-flight requests and re-zero the cache/positions while
+        keeping every compiled program (shapes are unchanged, so the jit
+        caches stay warm — a server restart without the recompile)."""
+        self.cache = model_init_cache(self.cfg, self.params, self.slots,
+                                      self.seq_budget)
+        self.tok[:] = 0
+        self.pos[:] = 0
+        self.tasks = [None] * self.slots
+        self.completed = []
+
+    # ----------------------------------------------------------- occupancy ---
+    def free_slots(self) -> list:
+        return [i for i, t in enumerate(self.tasks) if t is None]
+
+    @property
+    def n_active(self) -> int:
+        return self.slots - len(self.free_slots())
+
+    def pop_completed(self) -> list:
+        out, self.completed = self.completed, []
+        return out
+
+    def prefill_len(self, prompt_len: int) -> int:
+        return bucket_of(prompt_len, self.buckets)
+
+    # -------------------------------------------------------------- insert ---
+    def insert(self, req: Request, now: float = 0.0) -> int:
+        """Claim a free slot for ``req``: one compiled prefill of the bucket
+        prefix, cache written into the slot, prompt tail queued as forced
+        tokens for the shared decode step.  Returns the slot index."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot; admit at most free_slots()")
+        S = req.prompt_len
+        if S < 1:
+            raise ValueError(f"request {req.id}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.id}: max_new_tokens must be >= 1")
+        if S + req.max_new_tokens > self.seq_budget:
+            raise ValueError(
+                f"request {req.id}: prompt ({S}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds seq_budget="
+                f"{self.seq_budget}; the ring buffer would wrap and drop "
+                "context")
+        slot = free[0]
+        n = self.prefill_len(S)
+        fn = self._prefill_fns.get(n)
+        if fn is None:
+            fn = self._prefill_fns[n] = self._build_prefill(n)
+        toks = jnp.asarray(np.asarray(req.tokens[:n], np.int32)[None])
+        first, self.cache = fn(self.params, self.cache, toks, slot)
+        self.n_inserts += 1
+
+        task = _SlotTask(req=req, pending=list(req.tokens[n:]),
+                         admitted_at=float(now))
+        self.tasks[slot] = task
+        self.pos[slot] = n
+        if task.pending:
+            # the prefix's next-token prediction is a known prompt token:
+            # discard the argmax, force the tail through the decode step
+            self.tok[slot] = task.pending.pop(0)
+        else:
+            a0 = int(first)             # first generated token
+            self._emit(slot, a0, now)
+        return slot
+
+    # ---------------------------------------------------------------- step ---
+    def step(self, now: float = 0.0) -> list:
+        """One decode step for every slot (free lanes compute garbage that
+        nothing reads).  Returns the requests that finished this step."""
+        if self.n_active == 0:
+            return []
+        nxt, self.cache = self._step_fn(self.params, self.cache,
+                                        self.tok, self.pos)
+        nxt = np.asarray(nxt)           # the per-step host sync: (N,) tokens
+        self.n_steps += 1
+        done_before = len(self.completed)
+        for i, task in enumerate(self.tasks):
+            if task is None:
+                continue
+            self.pos[i] += 1
+            if task.pending:
+                # still consuming the prompt tail: the model's prediction is
+                # superseded by the known next prompt token
+                self.tok[i] = task.pending.pop(0)
+            else:
+                self._emit(i, int(nxt[i]), now)
+        return self.completed[done_before:]
+
+    def _emit(self, slot: int, token: int, now: float) -> None:
+        """Record one generated token for ``slot``; evict on completion
+        (host bookkeeping only — no device work, no recompile)."""
+        task = self.tasks[slot]
+        if task.first_token_at is None:
+            task.first_token_at = float(now)
+        task.generated.append(token)
+        done = (len(task.generated) >= task.req.max_new_tokens
+                or (self.eos_id is not None and token == self.eos_id))
+        if done:
+            self.completed.append(Response(
+                id=task.req.id, prompt_len=task.req.prompt_len,
+                tokens=tuple(task.generated), weights_version=self.version,
+                arrival=task.req.arrival, admitted_at=task.admitted_at,
+                first_token_at=task.first_token_at, finished_at=float(now)))
+            self.tasks[slot] = None
+        else:
+            self.tok[slot] = token
+
+    # ---------------------------------------------------------------- swap ---
+    def swap_weights(self, new_params, version: Optional[int] = None) -> None:
+        """Hot-swap the serving weights.  The pytree must match the current
+        params exactly (structure, shapes, dtypes — mismatches are named);
+        the old buffers are donated, so the swap neither recompiles the
+        decode/prefill programs nor doubles resident weight memory beyond
+        the unavoidable old+incoming overlap."""
+        assert_tree_compatible(self.params, new_params,
+                               what="hot-swapped serving weights")
+        if not hasattr(self, "_swap_fn"):
+            # old (donated) -> freed or aliased as the landing buffers for
+            # the incoming values; `new` is NOT donated, so a trainer handing
+            # us views into its live state keeps its buffers intact
+            self._swap_fn = jax.jit(
+                lambda old, new: jax.tree.map(
+                    lambda o, n: n.astype(o.dtype), old, new),
+                donate_argnums=(0,))
+        self.params = self._swap_fn(self.params, new_params)
+        self.version = int(version) if version is not None \
+            else self.version + 1
+        self.n_swaps += 1
+
+    # ----------------------------------------------------------- telemetry ---
+    def compile_counts(self) -> dict:
+        """Compiled-program counts per entry point — the no-recompile pin:
+        after warmup ``step`` stays at 1 and ``prefill`` at one per bucket
+        length used, no matter how many requests churn through."""
+        return {"step": jit_cache_size(self._step_fn),
+                "prefill": {n: jit_cache_size(fn)
+                            for n, fn in sorted(self._prefill_fns.items())}}
+
+    def stats(self) -> dict:
+        return {"slots": self.slots, "active": self.n_active,
+                "steps": self.n_steps, "inserts": self.n_inserts,
+                "swaps": self.n_swaps, "version": self.version,
+                "compiles": self.compile_counts()}

@@ -1,0 +1,83 @@
+"""Live weight hot-swap: `FedEngine` -> `ServeEngine`.
+
+The federated trainer periodically produces a new distilled global model
+(`algo.eval_params(state)` — for DS-FL the mean client model trained on the
+shared distillation logits).  `attach` wires a `WeightSync` observer into
+`FedEngine.on_chunk`, so at every ``chunk_rounds`` boundary the serving
+engine's weights are swapped in place:
+
+  * the incoming pytree is checked against the serving params
+    (`assert_tree_compatible` — structure, shapes, dtypes; mismatches are
+    named), so a trainer running a different config fails loudly instead of
+    serving garbage;
+  * treedefs match, so the swap hits the already-compiled decode/prefill
+    programs' jit caches — no recompile (pinned in tests/test_serve.py);
+  * the serving engine's old buffers are donated inside
+    `ServeEngine.swap_weights`; the trainer's state is passed as a regular
+    argument and stays intact (FedAvg's ``eval_params`` returns *views* of
+    the live client stack);
+  * responses emitted after the swap are stamped with
+    ``weights_version = rounds_done``, so a client can tell which round's
+    model produced its tokens.
+
+`swap_from_checkpoint` is the offline variant: load a params pytree saved
+with `repro.checkpoint.save_pytree` and hot-swap it into a running server.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+
+from ..checkpoint import load_pytree
+from .engine import ServeEngine
+
+
+@dataclass
+class WeightSync:
+    """`FedEngine.on_chunk` observer that hot-swaps a `ServeEngine`.
+
+    ``every``: swap at every ``every``-th completed round that on_chunk
+    reports (on_chunk already fires only at chunk boundaries; this thins it
+    further).  ``swap_log`` records ``(round, seconds)`` per swap — the
+    measured swap latency `benchmarks.serve_bench` reports."""
+    serve: ServeEngine
+    algo: object                        # FedAlgorithm (eval_params provider)
+    every: int = 1
+    swap_log: list = field(default_factory=list)
+
+    def __call__(self, rounds_done: int, state) -> None:
+        if rounds_done % max(1, int(self.every)) != 0:
+            return
+        params, _ = self.algo.eval_params(state)
+        t0 = time.perf_counter()
+        self.serve.swap_weights(params, version=rounds_done)
+        jax.block_until_ready(self.serve.params)
+        self.swap_log.append((int(rounds_done), time.perf_counter() - t0))
+
+    @property
+    def last_swap_s(self) -> Optional[float]:
+        return self.swap_log[-1][1] if self.swap_log else None
+
+
+def attach(fed_engine, serve_engine: ServeEngine, algo,
+           every: int = 1) -> WeightSync:
+    """Install a `WeightSync` as ``fed_engine.on_chunk`` and return it.
+    ``algo`` is the algorithm instance the trainer runs (its ``eval_params``
+    extracts the servable global model from the round state)."""
+    sync = WeightSync(serve=serve_engine, algo=algo, every=every)
+    fed_engine.on_chunk = sync
+    return sync
+
+
+def swap_from_checkpoint(serve_engine: ServeEngine, path: str,
+                         version: Optional[int] = None) -> float:
+    """Load a params pytree (`save_pytree` format) and hot-swap it into a
+    running server; returns the measured swap latency in seconds."""
+    params = load_pytree(path)
+    t0 = time.perf_counter()
+    serve_engine.swap_weights(params, version=version)
+    jax.block_until_ready(serve_engine.params)
+    return time.perf_counter() - t0

@@ -1,0 +1,313 @@
+"""repro.serve: continuous batching + live weight hot-swap.
+
+The load-bearing pins:
+  * slot-engine parity — N staggered requests through one shared engine are
+    token-identical to serving each alone, and (attention archs, bucket-exact
+    prompts) to the pre-subsystem lockstep baseline in `launch.serve`;
+  * no recompiles after warmup — the decode step compiles exactly once and
+    each prefill bucket exactly once, no matter how many requests are
+    admitted/evicted (asserted through the jit cache size);
+  * hot-swap — a live `FedEngine` run swaps the server's weights at chunk
+    boundaries: responses before/after carry the old/new version stamps and
+    the swap adds zero compiles;
+  * queue invariants (hypothesis) — every submitted request is accounted
+    exactly once, admission never exceeds the free-slot budget, FIFO holds
+    within each bucket.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import FedEngine
+from repro.core.llm_algorithms import LLMDSFLAlgorithm
+from repro.core.llm_dsfl import LLMDsflHP
+from repro.data.pipeline import build_lm_task
+from repro.launch.serve import serve as lockstep_serve
+from repro.launch.serve import steady_ms_per_step
+from repro.models.api import model_init
+from repro.serve import (AdmissionQueue, LoadSpec, Request, ServeEngine,
+                         attach, bucket_of, draw_arrivals, run_load,
+                         swap_from_checkpoint)
+
+QWEN = get_config("qwen1.5-4b").smoke()
+MAMBA = get_config("mamba2-2.7b").smoke()
+BUCKETS = (8, 16)
+BUDGET = 48
+
+
+@pytest.fixture(scope="module")
+def qwen_params(rng):
+    return model_init(QWEN, rng)
+
+
+@pytest.fixture(scope="module")
+def mamba_params(rng):
+    return model_init(MAMBA, rng)
+
+
+def _prompts(vocab, lens, seed=3):
+    g = np.random.default_rng(seed)
+    return [tuple(int(x) for x in g.integers(0, vocab, size=S)) for S in lens]
+
+
+def _drain(engine, now=0.0):
+    out = []
+    while engine.n_active:
+        now += 1.0
+        engine.step(now)
+        out.extend(engine.pop_completed())
+    return out
+
+
+def _solo(cfg, params, tokens, max_new):
+    eng = ServeEngine(cfg, params, slots=1, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    eng.insert(Request(id=0, tokens=tokens, max_new_tokens=max_new))
+    (r,) = _drain(eng)
+    return r.tokens
+
+
+# ------------------------------------------------------------------ parity --
+@pytest.mark.parametrize("arch", ["qwen", "mamba"])
+def test_staggered_requests_match_each_alone(arch, qwen_params, mamba_params):
+    """Continuous batching must not change tokens: requests of different
+    prompt lengths admitted at different times, sharing the slot batch with
+    whoever else is mid-flight, decode exactly as if each ran alone."""
+    cfg, params = ((QWEN, qwen_params) if arch == "qwen"
+                   else (MAMBA, mamba_params))
+    prompts = _prompts(cfg.vocab, lens=(5, 12, 20, 16))
+    max_new = 6
+    solo = [_solo(cfg, params, p, max_new) for p in prompts]
+
+    eng = ServeEngine(cfg, params, slots=3, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    q = AdmissionQueue(buckets=BUCKETS)
+    for i, p in enumerate(prompts):            # staggered arrivals
+        q.submit(p, max_new, now=float(i))
+    got, now = {}, 0.0
+    while len(got) < len(prompts):
+        for req in q.admit(now, len(eng.free_slots())):
+            eng.insert(req, now)
+        for r in eng.step(now):
+            got[r.id] = r.tokens
+        now += 1.0
+    assert [got[i] for i in range(len(prompts))] == solo
+
+
+def test_engine_matches_lockstep_baseline(qwen_params):
+    """With bucket-exact prompts on an attention arch the slot engine is
+    token-identical to the pre-subsystem whole-batch lockstep path."""
+    B, S, gen = 3, 16, 8
+    g = np.random.default_rng(0)
+    tokens = g.integers(0, QWEN.vocab, size=(B, S))
+    budget = S + gen
+    base, times = lockstep_serve(QWEN, qwen_params,
+                                 {"tokens": jnp.asarray(tokens, jnp.int32)},
+                                 gen, budget)
+    assert steady_ms_per_step(times) > 0.0
+    base = np.asarray(base)
+
+    eng = ServeEngine(QWEN, qwen_params, slots=B, seq_budget=budget,
+                      buckets=(S,))
+    for i in range(B):
+        eng.insert(Request(id=i, tokens=tuple(int(t) for t in tokens[i]),
+                           max_new_tokens=gen))
+    got = {r.id: r.tokens for r in _drain(eng)}
+    for i in range(B):
+        assert got[i] == tuple(int(t) for t in base[i])
+
+
+# ------------------------------------------------------------- no recompile --
+def test_no_recompile_after_warmup(qwen_params):
+    """Admission, eviction, and slot churn never trigger a recompile: after
+    the first request of each bucket length, jit cache sizes are pinned."""
+    eng = ServeEngine(QWEN, qwen_params, slots=2, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    warm = _prompts(QWEN.vocab, lens=(10, 17), seed=1)
+    for i, p in enumerate(warm):
+        eng.insert(Request(id=i, tokens=p, max_new_tokens=3))
+    _drain(eng)
+    pinned = eng.compile_counts()
+    assert pinned["step"] == 1
+    assert set(pinned["prefill"]) == {8, 16}
+
+    # churn: 6 more requests across both buckets, arriving mid-flight
+    for j, p in enumerate(_prompts(QWEN.vocab, lens=(9, 21, 8, 16, 30, 11),
+                                   seed=2)):
+        while not eng.free_slots():
+            eng.step()
+        eng.insert(Request(id=10 + j, tokens=p, max_new_tokens=2))
+        eng.step()
+    _drain(eng)
+    assert eng.compile_counts() == pinned
+
+
+def test_insert_rejects_over_budget(qwen_params):
+    eng = ServeEngine(QWEN, qwen_params, slots=1, seq_budget=16,
+                      buckets=(8,))
+    with pytest.raises(ValueError, match="seq_budget"):
+        eng.insert(Request(id=0, tokens=tuple(range(12)), max_new_tokens=8))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.insert(Request(id=1, tokens=(), max_new_tokens=2))
+
+
+# ------------------------------------------------------------------ loadgen --
+def test_loadgen_deterministic_and_accounted(qwen_params):
+    spec = LoadSpec(n_requests=12, rate=6.0, prompt_len=(3, 30),
+                    max_new=(2, 6), vocab=QWEN.vocab, seed=11)
+    assert draw_arrivals(spec) == draw_arrivals(spec)   # seeded: identical
+
+    eng = ServeEngine(QWEN, qwen_params, slots=3, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    q = AdmissionQueue(buckets=BUCKETS, timeout=60.0, max_queue=32)
+    rep = run_load(eng, q, spec)
+    assert rep["completed"] + rep["shed"] == spec.n_requests
+    assert rep["tokens"] > 0 and rep["latency_p50_s"] > 0
+    assert rep["latency_p99_s"] >= rep["latency_p50_s"]
+    assert rep["compiles"]["step"] == 1
+
+
+# ----------------------------------------------------------------- hot swap --
+def test_hot_swap_from_live_fed_engine(rng):
+    """Train-while-serving: a FedEngine LLM DSFL run hot-swaps the server's
+    weights at every chunk boundary.  Responses decoded before the run carry
+    version 0, responses after carry the final round number, and the swap
+    adds zero compiled programs."""
+    K, B, S = 2, 4, 32
+    task = build_lm_task(seed=0, K=K, batch=B, seq=S, vocab=QWEN.vocab)
+    hp = LLMDsflHP(lr=5e-3, rounds=2, seed=0, open_batch=B)
+    algo = LLMDSFLAlgorithm(QWEN, hp)
+    stacked = jax.vmap(lambda k: model_init(QWEN, k))(jax.random.split(rng, K))
+    fed = FedEngine(algo)
+    state = algo.init_from(stacked)
+
+    srv = ServeEngine(QWEN, model_init(QWEN, rng), slots=2,
+                      seq_budget=BUDGET, buckets=BUCKETS)
+    prompt = _prompts(QWEN.vocab, lens=(12,))[0]
+
+    srv.insert(Request(id=0, tokens=prompt, max_new_tokens=4))
+    (before,) = _drain(srv)
+    assert before.weights_version == 0
+    pinned = srv.compile_counts()
+
+    sync = attach(fed, srv, algo)
+    state = fed.run(state, task, rounds=2)
+    assert [r for r, _ in sync.swap_log] == [1, 2]
+    assert all(dt >= 0 for _, dt in sync.swap_log)
+    assert srv.version == 2
+
+    srv.insert(Request(id=1, tokens=prompt, max_new_tokens=4))
+    (after,) = _drain(srv)
+    assert after.weights_version == 2
+    assert srv.compile_counts() == pinned       # swap never recompiles
+
+    # the served weights ARE the trained global model
+    want, _ = algo.eval_params(state)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), want, srv.params)
+
+
+def test_swap_mismatch_names_leaves(qwen_params):
+    srv = ServeEngine(QWEN, qwen_params, slots=1, seq_budget=16,
+                      buckets=(8,))
+    bad = jax.tree.map(lambda a: a, qwen_params)
+    key = sorted(bad)[0]
+    bad[key] = jax.tree.map(lambda a: a[..., :1], bad[key])
+    with pytest.raises(ValueError, match=key):
+        srv.swap_weights(bad)
+
+
+def test_swap_from_checkpoint(tmp_path, qwen_params):
+    from repro.checkpoint import save_pytree
+    srv = ServeEngine(QWEN, qwen_params, slots=1, seq_budget=16,
+                      buckets=(8,))
+    new = jax.tree.map(lambda a: a * 0.5, qwen_params)
+    path = str(tmp_path / "weights.msgpack")
+    save_pytree(path, new)
+    dt = swap_from_checkpoint(srv, path, version=7)
+    assert dt >= 0 and srv.version == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), new, srv.params)
+
+
+def test_load_state_mismatch_names_leaves(rng, tmp_path):
+    """A checkpoint saved from a different config fails loudly at load time
+    with the offending leaves named, not later inside a jit."""
+    K, B, S = 2, 4, 32
+    hp = LLMDsflHP(lr=5e-3, rounds=1, seed=0, open_batch=B)
+    algo = LLMDSFLAlgorithm(QWEN, hp)
+    stacked = jax.vmap(lambda k: model_init(QWEN, k))(jax.random.split(rng, K))
+    fed = FedEngine(algo)
+    state = algo.init_from(stacked)
+    path = str(tmp_path / "state.msgpack")
+    fed.save_state(path, state)
+
+    wrong = jax.tree.map(lambda a: a, state)
+    with pytest.raises(ValueError, match="does not match"):
+        like = jax.tree.map(
+            lambda a: a[..., :1] if a.ndim > 1 else a, wrong)
+        fed.load_state(path, like)
+
+
+# ---------------------------------------------------------- queue invariants --
+def test_bucket_of():
+    assert bucket_of(20, (8, 16, 32)) == 16
+    assert bucket_of(16, (8, 16, 32)) == 16
+    assert bucket_of(5, (8, 16, 32)) == 5     # shorter than every bucket
+    assert bucket_of(100, (8, 16, 32)) == 32
+
+
+def test_queue_invariants_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    ops = st.lists(st.tuples(st.booleans(),           # submit vs admit
+                             st.integers(1, 40),      # prompt len / slots
+                             st.integers(0, 3)),      # clock increment
+                   max_size=60)
+
+    @settings(deadline=None, max_examples=80)
+    @given(ops)
+    def run(events):
+        q = AdmissionQueue(buckets=(8, 16), timeout=4.0, max_queue=5)
+        now, admitted = 0.0, []
+        for is_submit, a, dt in events:
+            now += dt * 0.75
+            if is_submit:
+                q.submit(tuple(range(a)), 4, now=now)
+            else:
+                free = a % 4
+                got = q.admit(now, free)
+                assert len(got) <= free          # never exceeds slot budget
+                admitted.extend(got)
+        q.shed_expired(now + 1e9)                # flush whatever remains
+        assert len(q) == 0
+        # exactly-once accounting: submitted == admitted + shed, no dupes
+        ids = [r.id for r in admitted] + [r.id for r in q.shed]
+        assert len(ids) == len(set(ids)) == q.n_submitted
+        assert q.n_admitted == len(admitted)
+        for r in q.shed:
+            assert r.shed and r.tokens == ()
+        # FIFO within each bucket: ids are issued in submit order
+        per_bucket = {}
+        for r in admitted:
+            per_bucket.setdefault(bucket_of(r.prompt_len, (8, 16)),
+                                  []).append(r.id)
+        for got_ids in per_bucket.values():
+            assert got_ids == sorted(got_ids)
+
+    run()
+
+
+def test_queue_timeout_and_overload_shed():
+    q = AdmissionQueue(buckets=(8,), timeout=1.0, max_queue=2)
+    q.submit((1, 2, 3), 4, now=0.0)
+    q.submit((1, 2, 3), 4, now=0.1)
+    q.submit((1, 2, 3), 4, now=0.2)              # over max_queue: shed now
+    assert len(q.shed) == 1 and q.shed[0].shed
+    assert q.admit(now=5.0, free_slots=4) == []  # both expired meanwhile
+    assert len(q.shed) == 3
+    assert q.n_submitted == 3 and len(q) == 0
