@@ -1,8 +1,9 @@
 """Engine hot-loop benchmark: per-round wallclock of the Python loop vs the
 compiled `chunk_rounds` lax.scan (chunk 1/8/32), participation-sparse vs
-dense-masked rounds at fraction 0.1/0.5/1.0, and einsum+softmax vs the
-fused weighted-ERA Pallas kernel — the hot paths this repo's
-time-to-accuracy claims ride on.
+dense-masked rounds at fraction 0.1/0.5/1.0, cohort-resident round cost vs
+fleet size K at fixed cohort m (flat in K — the million-client headline),
+and einsum+softmax vs the fused weighted-ERA Pallas kernel — the hot paths
+this repo's time-to-accuracy claims ride on.
 
 Emits ``BENCH_engine.json`` (cwd) so the perf trajectory is recorded
 per-commit, and returns CSV rows for `benchmarks.run` (key ``engine``).
@@ -32,14 +33,18 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.algorithms import DSFLAlgorithm
+from repro.core.cohort import ClientStore
 from repro.core.engine import FedEngine
 from repro.core.protocol import DSFLConfig
-from repro.data.pipeline import build_image_task
+from repro.data.pipeline import SyntheticProvider, build_image_task
 from repro.kernels.era_sharpen import resolve_interpret
 from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.sim import ClientPopulation, CohortRunner, SyncScheduler
 
 CHUNKS = (1, 8, 32)
 FRACTIONS = (0.1, 0.5, 1.0)
+POPULATIONS = (1_000, 10_000, 100_000)
+POPULATIONS_FULL = (10_000, 100_000, 1_000_000)
 OUT_JSON = "BENCH_engine.json"
 
 
@@ -127,6 +132,52 @@ def bench_participation(fast: bool) -> dict:
     return {"clients": K, "rounds": R, "chunk_rounds": chunk, **out}
 
 
+def bench_population_scaling(fast: bool) -> dict:
+    """The million-client headline: per-round wallclock and resident
+    client-state bytes of a `CohortRunner` fleet as K grows at a *fixed*
+    cohort size m — both must be flat in K (nothing in the cohort-resident
+    hot path is O(K): O(m log K) participation draws, an O(S) device slab,
+    an O(#touched) host store, per-id synthetic data).  The O(K) pieces —
+    fleet profiles, the provider's key — are one-time setup, excluded from
+    the per-round timing and from the resident-state number."""
+    Ks = POPULATIONS if fast else POPULATIONS_FULL
+    m, R, chunk = (8, 6, 3) if fast else (50, 8, 4)
+    hp = DSFLConfig(rounds=R + 2 * chunk, local_epochs=1, distill_epochs=1,
+                    batch_size=10, open_batch=40, aggregation="era")
+    out = {"cohort": m, "rounds": R, "chunk_rounds": chunk}
+    for K in Ks:
+        algo = DSFLAlgorithm(apply_tiny_mlp, hp)
+        eng = FedEngine(algo)
+        prov = SyntheticProvider(seed=0, n_clients=K, n_per_client=10,
+                                 n_open=40)
+        sched = SyncScheduler(ClientPopulation.lognormal(0, K),
+                              fraction=m / K)
+        rng0 = jax.random.PRNGKey(hp.seed)
+        store = ClientStore(lambda ids, a=algo, k=K:
+                            a.init_cohort(rng0, init_tiny_mlp, ids, k))
+        runner = CohortRunner(engine=eng, scheduler=sched, provider=prov,
+                              store=store, seed=0)
+        # two warmup chunks compile the slab round AND reach the lazy-init
+        # steady state (S is fixed across chunks, so one compile serves all)
+        state = runner.run(algo.init_server(rng0, init_tiny_mlp),
+                           rounds=2 * chunk, chunk_rounds=chunk)
+        _block(state)
+        t0 = time.perf_counter()
+        state = runner.run(state, rounds=R, chunk_rounds=chunk)
+        _block(state)
+        out[f"K{K}"] = {
+            "per_round_us": (time.perf_counter() - t0) / R * 1e6,
+            "resident_bytes": runner.resident_bytes(),
+            "peak_slab_bytes": runner.peak_slab_bytes,
+            "touched_clients": len(store)}
+    us = [out[f"K{K}"]["per_round_us"] for K in Ks]
+    res = [out[f"K{K}"]["resident_bytes"] for K in Ks]
+    out["flat_in_K"] = {"populations": list(Ks),
+                        "wallclock_ratio": max(us) / min(us),
+                        "resident_ratio": max(res) / min(res)}
+    return out
+
+
 def bench_weighted_era(fast: bool) -> dict:
     """einsum+softmax vs the fused weighted-ERA kernel on a (K, N, C) logit
     stack.  On CPU the kernel runs in interpret mode (recorded as such);
@@ -163,9 +214,11 @@ def run(fast: bool = True):
     BENCH_engine.json side effect."""
     scan = bench_loop_vs_scan(fast)
     part = bench_participation(fast)
+    popu = bench_population_scaling(fast)
     wera = bench_weighted_era(fast)
     with open(OUT_JSON, "w") as f:
         json.dump({"scan": scan, "participation": part,
+                   "population_scaling": popu,
                    "weighted_era": wera}, f, indent=2)
 
     rows = []
@@ -178,6 +231,12 @@ def run(fast: bool = True):
         rows.append((f"participation_sparse_f{frac}", rec["sparse_us"],
                      f"dense={rec['dense_us']:.0f}us "
                      f"speedup={rec['speedup']:.2f}x bitwise=ok"))
+    for K in popu["flat_in_K"]["populations"]:
+        rec = popu[f"K{K}"]
+        rows.append((f"cohort_round_K{K}", rec["per_round_us"],
+                     f"resident={rec['resident_bytes']}B "
+                     f"slab={rec['peak_slab_bytes']}B "
+                     f"touched={rec['touched_clients']}"))
     mode = "interpret" if wera["kernel_interpret_mode"] else "compiled"
     rows.append(("weighted_era_einsum", wera["einsum_us"], ""))
     rows.append(("weighted_era_kernel", wera["kernel_us"],
@@ -203,6 +262,13 @@ def main(argv=None) -> int:
     print(f"wrote {OUT_JSON}: {per_round}")
     print(f"participation (K={part['clients']}): " + ", ".join(
         f"f={f} {part[f'fraction{f}']['speedup']:.2f}x" for f in FRACTIONS))
+    popu = bench["population_scaling"]
+    flat = popu["flat_in_K"]
+    print(f"population scaling (m={popu['cohort']}): "
+          + ", ".join(f"K={K} {popu[f'K{K}']['per_round_us']:.0f}us"
+                      for K in flat["populations"])
+          + f"  wallclock_ratio={flat['wallclock_ratio']:.2f} "
+          f"resident_ratio={flat['resident_ratio']:.2f}")
     if args.smoke:
         assert per_round["chunk32"] < per_round["chunk1"], (
             "scan chunking failed to beat the per-round loop: "
@@ -211,6 +277,12 @@ def main(argv=None) -> int:
         assert sp >= 3.0, (
             f"participation-sparse round only {sp:.2f}x over dense masked "
             f"at 10% participation (expected >= 3x): {part}")
+        # the tentpole headline: at fixed cohort size, a 100x larger fleet
+        # costs neither wallclock nor resident client-state memory
+        assert flat["wallclock_ratio"] <= 3.0, (
+            f"cohort round wallclock not flat in K: {popu}")
+        assert flat["resident_ratio"] <= 2.0, (
+            f"resident client state not flat in K: {popu}")
     print("OK")
     return 0
 

@@ -1,5 +1,7 @@
-"""DS-FL on a simulated 100-device mobile fleet: 10% participation per
-round, lognormal link rates, a straggler deadline — accuracy plotted against
+"""DS-FL on a simulated mobile fleet — from 100 devices to a million.
+
+Small fleets run the dense `SimRunner` path: 10% participation per round,
+lognormal link rates, a straggler deadline — accuracy plotted against
 *virtual wallclock* and measured cumulative bytes (the paper's Figs. 5-8
 axes), all through the unchanged `FedEngine` round:
 
@@ -13,13 +15,28 @@ axes), all through the unchanged `FedEngine` round:
 whole chunk ahead, and the chunk runs as one compiled `lax.scan` inside the
 engine (`FedEngine.run(chunk_rounds=k, ctx_plan=...)`) — bitwise identical
 to the per-round loop, without its one-dispatch-per-round host overhead.
-
 At 10% participation the round is also *participation-sparse* by default
 (``active_budget="auto"``): the engine computes only the scheduler's
-budgeted ~``2 * ceil(0.1 * K)`` client lanes (admitted stragglers can ride
-on top of the sampled cohort) instead of the full K-client stack — same
-bits, ~K/m cheaper.  ``--dense`` forces the old full-stack masked round
-for comparison.
+budgeted ~``2 * ceil(0.1 * K)`` client lanes instead of the full K-client
+stack — same bits, ~K/m cheaper.  ``--dense`` forces the full-stack masked
+round for comparison.
+
+Large fleets (K >= 10000, or ``--cohort``) switch to the **cohort-resident**
+path, where nothing is O(K) per round: the scheduler draws m-client
+cohorts as id arrays (O(m log K) — Floyd / cached-CDF draws), client state
+lives host-side in a `ClientStore` keyed by global id (lazily initialized,
+so untouched clients cost nothing), private data comes from a per-id
+`SyntheticProvider`, and the engine runs its ordinary fused rounds over an
+(S,)-lane slab.  At small K this path is bitwise identical to the dense
+masked rounds (tests/test_cohort.py).  The headline configuration —
+
+  PYTHONPATH=src python examples/sim_stragglers.py --clients 1000000 \\
+      --fraction 1e-4                                  # ~1 min on CPU
+
+— simulates a million-client federation at 0.01% participation: 100
+clients train per round, the resident client state is ~100 rows per round
+of history (printed alongside the wire bytes below), and per-round
+wallclock is flat in K (benchmarks/engine_bench.py population_scaling).
 
   PYTHONPATH=src python examples/sim_stragglers.py          # ~2 min on CPU
   PYTHONPATH=src python examples/sim_stragglers.py --fast   # smoke (~30 s)
@@ -27,21 +44,29 @@ for comparison.
 import argparse
 import sys
 
+import jax
+
 from repro.core.algorithms import DSFLAlgorithm
+from repro.core.cohort import ClientStore
 from repro.core.comm import fmt_bytes
 from repro.core.engine import FedEngine, make_eval_fn
 from repro.core.protocol import DSFLConfig
-from repro.data.pipeline import build_image_task
+from repro.data.pipeline import (SyntheticProvider, build_image_task)
 from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
-from repro.sim import ClientPopulation, SimRunner, SyncScheduler
+from repro.sim import (ClientPopulation, CohortRunner, SimRunner,
+                       SyncScheduler)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=100,
+                    help="fleet size K (a million works: see --cohort)")
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--participation", type=float, default=0.1)
+    ap.add_argument("--fraction", type=float, default=None,
+                    help="participation fraction per round (the paper's "
+                         "C; alias of --participation, wins if both given)")
     ap.add_argument("--deadline", type=float, default=20.0)
     ap.add_argument("--chunk", type=int, default=4,
                     help="rounds fused per compiled lax.scan chunk "
@@ -50,19 +75,22 @@ def main(argv=None):
                     help="force the dense masked round (compute all K "
                          "clients) instead of the participation-sparse "
                          "plane; bitwise identical, ~K/m slower")
+    ap.add_argument("--cohort", action="store_true",
+                    help="force the cohort-resident path (automatic for "
+                         "K >= 10000): O(m log K) scheduling, host-side "
+                         "id-keyed client store, per-id synthetic data — "
+                         "nothing O(K) in the round loop")
     args = ap.parse_args(argv)
 
     K = 20 if args.fast else args.clients
     rounds = 3 if args.fast else args.rounds
-    task = build_image_task(seed=0, K=K, n_private=20 * K, n_open=200,
-                            n_test=300, distribution="non_iid")
+    fraction = (args.participation if args.fraction is None
+                else args.fraction)
+    use_cohort = (args.cohort or K >= 10000) and not args.dense
 
     hp = DSFLConfig(rounds=rounds, local_epochs=1, distill_epochs=1,
-                    batch_size=20, open_batch=min(200, task.open_x.shape[0]),
-                    aggregation="era")
+                    batch_size=20, open_batch=200, aggregation="era")
     algo = DSFLAlgorithm(apply_tiny_mlp, hp)
-    eng = FedEngine(algo, make_eval_fn(apply_tiny_mlp, task.x_test,
-                                       task.y_test))
 
     # a heterogeneous mobile fleet: lognormal compute and uplink, 10x
     # downlink, availability in [0.6, 1.0]; stragglers past the deadline are
@@ -71,33 +99,58 @@ def main(argv=None):
                                      compute_sigma=0.8, uplink_median=2e4,
                                      uplink_sigma=1.0,
                                      availability=(0.6, 1.0))
-    sched = SyncScheduler(pop, fraction=args.participation,
-                          deadline=args.deadline, straggler="admit",
-                          sampler="available")
-    runner = SimRunner(eng, sched, seed=0)
-
-    state = eng.init(lambda k: init_tiny_mlp(k), task)
-    # eval forces a host sync, so it rides the chunk cadence: log_every ==
-    # chunk keeps each scan segment fully fused (chunk snaps to log_every)
+    sched = SyncScheduler(pop, fraction=fraction, deadline=args.deadline,
+                          straggler="admit", sampler="available")
     chunk = max(1, min(args.chunk, rounds))
-    runner.run(state, task, rounds=rounds, chunk_rounds=chunk,
-               log_every=chunk,
-               active_budget=None if args.dense else "auto")
 
-    budget = sched.active_budget
-    print(f"\n{K} clients, {args.participation:.0%} participation/round, "
-          f"deadline {args.deadline:.0f}s, "
-          + ("dense masked rounds" if args.dense or budget >= K else
-         f"sparse rounds: {budget}/{K} client lanes computed"))
+    if use_cohort:
+        prov = SyntheticProvider(seed=0, n_clients=K, n_per_client=20,
+                                 n_open=200, n_test=300)
+        eng = FedEngine(algo, make_eval_fn(apply_tiny_mlp, prov.x_test,
+                                           prov.y_test))
+        rng0 = jax.random.PRNGKey(hp.seed)
+        store = ClientStore(
+            lambda ids: algo.init_cohort(rng0, init_tiny_mlp, ids, K))
+        runner = CohortRunner(engine=eng, scheduler=sched, provider=prov,
+                              store=store, seed=0)
+        runner.run(algo.init_server(rng0, init_tiny_mlp), rounds=rounds,
+                   chunk_rounds=chunk, log_every=chunk)
+        mode = (f"cohort-resident rounds: <= {sched.active_budget} of {K} "
+                f"clients resident per round")
+    else:
+        task = build_image_task(seed=0, K=K, n_private=20 * K, n_open=200,
+                                n_test=300, distribution="non_iid")
+        eng = FedEngine(algo, make_eval_fn(apply_tiny_mlp, task.x_test,
+                                           task.y_test))
+        runner = SimRunner(eng, sched, seed=0)
+        state = eng.init(init_tiny_mlp, task)
+        # eval forces a host sync, so it rides the chunk cadence: log_every
+        # == chunk keeps each scan segment fully fused
+        runner.run(state, task, rounds=rounds, chunk_rounds=chunk,
+                   log_every=chunk,
+                   active_budget=None if args.dense else "auto")
+        budget = sched.active_budget
+        mode = ("dense masked rounds" if args.dense or budget >= K else
+                f"sparse rounds: {budget}/{K} client lanes computed")
+
+    print(f"\n{K} clients, {fraction:.2%} participation/round, "
+          f"deadline {args.deadline:.0f}s, {mode}")
     for rec in runner.history:
         acc = (f"acc {rec['test_acc']:.3f}" if "test_acc" in rec
                else "acc   ----")   # evals land at chunk boundaries
-        print(f"round {rec['round']:3d}  vt {rec['t_cum']:7.1f}s  "
+        resident = (f"  resident {fmt_bytes(rec['resident_bytes'])}"
+                    if "resident_bytes" in rec else "")
+        print(f"round {rec['round']:3d}  vt {rec['t_cum']:9.1f}s  "
               f"{acc}  "
-              f"{rec['participants']:3d} clients "
+              f"{rec['participants']:4d} clients "
               f"({rec['dropped']} late, "
               f"stale {rec['mean_staleness']:.2f})  "
-              f"cum {fmt_bytes(rec['cum_bytes'])}")
+              f"cum {fmt_bytes(rec['cum_bytes'])}{resident}")
+    if use_cohort:
+        print(f"client state resident on host: "
+              f"{fmt_bytes(runner.resident_bytes())} "
+              f"({len(runner.store)} of {K} clients ever touched); "
+              f"peak device slab {fmt_bytes(runner.peak_slab_bytes)}")
     t = runner.history.series("t_cum")
     ok = all(b > a for a, b in zip(t, t[1:])) and len(t) == rounds
     print("OK" if ok else "BROKEN CLOCK")

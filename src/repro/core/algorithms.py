@@ -45,7 +45,9 @@ from .aggregation import (aggregate, participation_weights, weighted_era,
                           weighted_sa)
 from .client import LocalSpec, local_distill, local_update, predict_probs
 from .fedavg import weighted_average
+from .hierarchy import hierarchical_weighted_era, hierarchical_weighted_sa
 from .losses import entropy, pinned_mean, pinned_sum
+from .prng import split_take
 from .protocol import DSFLConfig  # noqa: F401  (re-exported as part of the API)
 
 EMPTY = ()   # absent pytree slot (contributes no leaves)
@@ -91,7 +93,7 @@ class RoundState:
     server: ServerState = ServerState()
 
 
-@_pytree_dataclass(meta=("active_budget",))
+@_pytree_dataclass(meta=("active_budget", "population"))
 @dataclass(frozen=True)
 class BatchCtx:
     """Per-round data context (a single pytree argument to ``round``).
@@ -116,7 +118,20 @@ class BatchCtx:
     guarantee both by construction (`repro.sim.scheduler`; a zero-
     participant round's aggregation falls back to uniform-over-K, which
     needs the very uploads the sparse plane skips — `FedEngine.run` and
-    `SimRunner` reject violating plans loudly)."""
+    `SimRunner` reject violating plans loudly).
+
+    ``cohort``/``population`` are the cohort-resident round plane: when
+    ``cohort`` carries an (S,) int array of *global client ids*, the leading
+    client axis of every per-client field (``x``/``y``/``mask``/``stale``/
+    the client stack in `RoundState`) is an O(m) **slab** over those ids
+    rather than the full population — client state streams through a host-
+    side `repro.core.cohort.ClientStore` between rounds, and resident
+    memory stops depending on K entirely.  ``population`` (static metadata)
+    is the true fleet size K: per-client RNG keys are derived as rows
+    ``cohort`` of ``split(r, population)`` (`core.prng.split_take`, O(S)),
+    so a client consumes bitwise the same key stream whichever slab lane it
+    lands in — the invariant that makes small-K cohort-resident rounds
+    bitwise identical to the dense masked rounds (tests/test_cohort.py)."""
     x: Any = EMPTY          # (K, I_k, ...) private inputs
     y: Any = EMPTY          # (K, I_k) private labels
     open_x: Any = EMPTY     # (I_o, ...) the full shared open set
@@ -124,7 +139,9 @@ class BatchCtx:
     weights: Any = EMPTY    # (K,) client dataset sizes (FedAvg Eq. 3)
     mask: Any = EMPTY       # (K,) 0/1 participation this round
     stale: Any = EMPTY      # (K,) rounds since each client last synced
+    cohort: Any = EMPTY     # (S,) global client id of each slab lane
     active_budget: Optional[int] = None   # static per-round activity bound m
+    population: Optional[int] = None      # static fleet size K (cohort mode)
 
 
 # ------------------------------------------------------------- protocol ------
@@ -172,6 +189,17 @@ def select_clients(mask, new_tree, old_tree):
         return jnp.where(mb, n, o)
 
     return jax.tree.map(sel, new_tree, old_tree)
+
+
+def client_keys(rng, ctx: BatchCtx, K: int):
+    """The (K, 2) per-client keys of one round leg.  Dense populations draw
+    the house discipline's ``split(rng, K)``; a cohort slab draws rows
+    ``ctx.cohort`` of ``split(rng, population)`` instead (O(S), bitwise the
+    same rows — `core.prng.split_take`), so per-client randomness is a
+    function of the *global* client id, never of slab placement."""
+    if present(ctx.cohort):
+        return split_take(rng, ctx.cohort, ctx.population)
+    return jax.random.split(rng, K)
 
 
 def masked_mean(values, mask):
@@ -235,12 +263,18 @@ class DSFLAlgorithm:
     previously always fell back to einsum+softmax (two extra HBM passes
     over the (K, n, C) logit stack).  Default False: the pure-jnp route,
     bit-pinned against the seed engine.
+
+    ``agg_edges > 1`` routes "4. Aggregation" through the two-level edge →
+    server tree (`core.hierarchy`): globally-normalized weights, per-edge
+    partial sums, server sharpen.  ``agg_edges=1`` (default) is bitwise the
+    flat path; deeper trees carry `core.hierarchy`'s tolerance contract.
     """
     apply_fn: Callable
     hp: DSFLConfig
     corrupt: Optional[Callable] = None
     agg_weights: Optional[jax.Array] = None   # for aggregation="weighted_era"
     use_kernel: bool = False
+    agg_edges: int = 1
 
     name = "dsfl"
     uses_open = True
@@ -271,6 +305,29 @@ class DSFLAlgorithm:
             server=ServerState(params=wg, model_state=sg,
                                opt_distill=spec_d.opt.init(wg)))
 
+    def init_server(self, rng, model_init: Callable) -> RoundState:
+        """Cohort-resident entry point: only the server model materializes
+        (same ``rng`` discipline as `init`, so the server state is bitwise
+        the dense init's); client slabs stream in via `init_cohort` /
+        `repro.core.cohort.ClientStore`."""
+        spec_u, spec_d = self._specs()
+        wg, sg = model_init(rng)
+        return RoundState(server=ServerState(params=wg, model_state=sg,
+                                             opt_distill=spec_d.opt.init(wg)))
+
+    def init_cohort(self, rng, model_init: Callable, ids,
+                    population: int) -> ClientState:
+        """The (|ids|, ...) slab of fresh client states for the given global
+        ids: row g of the would-be dense `init` stack is re-derived from g's
+        key alone (`core.prng.split_take`), so lazily materializing a
+        million-client fleet m clients at a time is bitwise identical to
+        gathering rows out of ``_stack_init(model_init, rng, K)``."""
+        spec_u, spec_d = self._specs()
+        wk, sk = jax.vmap(model_init)(split_take(rng, ids, population))
+        return ClientState(params=wk, model_state=sk,
+                           opt_update=jax.vmap(spec_u.opt.init)(wk),
+                           opt_distill=jax.vmap(spec_d.opt.init)(wk))
+
     def _masked_teacher(self, probs, ctx: BatchCtx):
         """"3-5. Upload / Aggregation / Broadcast" of a masked round, over
         the full (K, n, C) upload stack.  Shared verbatim by the dense
@@ -290,11 +347,20 @@ class DSFLAlgorithm:
         pw = participation_weights(
             ctx.mask, ctx.stale if present(ctx.stale) else None,
             hp.staleness_decay, base=agg_w)
-        global_logit = (
-            weighted_sa(probs, pw, use_kernel=self.use_kernel)
-            if hp.aggregation == "sa"
-            else weighted_era(probs, pw, hp.temperature,
-                              use_kernel=self.use_kernel))
+        if self.agg_edges > 1:
+            global_logit = (
+                hierarchical_weighted_sa(probs, pw, self.agg_edges,
+                                         use_kernel=self.use_kernel)
+                if hp.aggregation == "sa"
+                else hierarchical_weighted_era(probs, pw, hp.temperature,
+                                               self.agg_edges,
+                                               use_kernel=self.use_kernel))
+        else:
+            global_logit = (
+                weighted_sa(probs, pw, use_kernel=self.use_kernel)
+                if hp.aggregation == "sa"
+                else weighted_era(probs, pw, hp.temperature,
+                                  use_kernel=self.use_kernel))
         # the unsharpened SA diagnostic over the uploads that actually
         # happened: mask-weighted, since absent clients upload nothing
         sa_entropy = jnp.mean(entropy(weighted_sa(probs, ctx.mask)))
@@ -322,7 +388,7 @@ class DSFLAlgorithm:
         # absent clients' state; no per-client Python loop, shards cleanly)
         wk_n, sk_n, ouk_n, up_loss = jax.vmap(
             lambda w, s, o, xk, yk, rk: local_update(spec_u, w, s, o, xk, yk, rk)
-        )(wk, sk, ouk, ctx.x, ctx.y, jax.random.split(r1, K))
+        )(wk, sk, ouk, ctx.x, ctx.y, client_keys(r1, ctx, K))
         if masked:
             wk, sk, ouk = select_clients(ctx.mask, (wk_n, sk_n, ouk_n),
                                          (wk, sk, ouk))
@@ -347,9 +413,19 @@ class DSFLAlgorithm:
                 ent_k = jnp.mean(entropy(probs), axis=-1)       # (K,)
                 agg_w = 1.0 / (ent_k + 1e-3)
             pw = agg_w
-            global_logit = aggregate(probs, hp.aggregation, hp.temperature,
-                                     weights=agg_w,
-                                     use_kernel=self.use_kernel)
+            if self.agg_edges > 1:
+                w = (jnp.ones((K,), jnp.float32) if agg_w is None else agg_w)
+                global_logit = (
+                    hierarchical_weighted_sa(probs, w, self.agg_edges,
+                                             use_kernel=self.use_kernel)
+                    if hp.aggregation == "sa"
+                    else hierarchical_weighted_era(
+                        probs, w, hp.temperature, self.agg_edges,
+                        use_kernel=self.use_kernel))
+            else:
+                global_logit = aggregate(probs, hp.aggregation,
+                                         hp.temperature, weights=agg_w,
+                                         use_kernel=self.use_kernel)
             sa_entropy = jnp.mean(entropy(jnp.mean(probs, axis=0)))
         g_entropy = jnp.mean(entropy(global_logit))
 
@@ -357,7 +433,7 @@ class DSFLAlgorithm:
         wk_n, sk_n, odk_n, d_loss = jax.vmap(
             lambda w, s, o, rk: local_distill(spec_d, w, s, o, xo,
                                               global_logit, rk)
-        )(wk, sk, odk, jax.random.split(r2, K))
+        )(wk, sk, odk, client_keys(r2, ctx, K))
         if masked:
             wk, sk, odk = select_clients(ctx.mask, (wk_n, sk_n, odk_n),
                                          (wk, sk, odk))
@@ -420,7 +496,7 @@ class DSFLAlgorithm:
             lambda w, s, o, xk, yk, rk: local_update(spec_u, w, s, o, xk, yk,
                                                      rk)
         )(wk_m, sk_m, ouk_m, x_m, y_m,
-          jnp.take(jax.random.split(r1, K), idx, axis=0))
+          jnp.take(client_keys(r1, ctx, K), idx, axis=0))
         wk_m, sk_m, ouk_m = select_clients(mask_m, (wk_n, sk_n, ouk_n),
                                            (wk_m, sk_m, ouk_m))
 
@@ -438,7 +514,7 @@ class DSFLAlgorithm:
         wk_n, sk_n, odk_n, d_loss = jax.vmap(
             lambda w, s, o, rk: local_distill(spec_d, w, s, o, xo,
                                               global_logit, rk)
-        )(wk_m, sk_m, odk_m, jnp.take(jax.random.split(r2, K), idx, axis=0))
+        )(wk_m, sk_m, odk_m, jnp.take(client_keys(r2, ctx, K), idx, axis=0))
         wk_m, sk_m, odk_m = select_clients(mask_m, (wk_n, sk_n, odk_n),
                                            (wk_m, sk_m, odk_m))
 
@@ -508,6 +584,20 @@ class FDAlgorithm:
             params=wk, model_state=sk,
             opt_update=jax.vmap(spec.opt.init)(wk)))
 
+    def init_server(self, rng, model_init: Callable) -> RoundState:
+        """FD has no server model: the cohort-resident round state starts
+        empty and fills with streamed client slabs."""
+        return RoundState()
+
+    def init_cohort(self, rng, model_init: Callable, ids,
+                    population: int) -> ClientState:
+        """Fresh (|ids|, ...) client slab; bitwise rows of the dense `init`
+        stack (see `DSFLAlgorithm.init_cohort`)."""
+        spec = self._spec()
+        wk, sk = jax.vmap(model_init)(split_take(rng, ids, population))
+        return ClientState(params=wk, model_state=sk,
+                           opt_update=jax.vmap(spec.opt.init)(wk))
+
     def round(self, state: RoundState, ctx: BatchCtx, rng):
         hp = self.hp
         spec = self._spec()
@@ -525,7 +615,7 @@ class FDAlgorithm:
             # absent clients' per-class tables leave the Eq. 5 mean entirely
             owns = jnp.logical_and(owns, ctx.mask.astype(bool)[:, None])
         tg, n_own = fd_lib.aggregate_fd(tk, owns)
-        rngs = jax.random.split(rng, K)
+        rngs = client_keys(rng, ctx, K)
 
         def per_client(w, s, o, xk, yk, tkk, rk):
             tgt = fd_lib.distill_targets(tg, tkk, n_own, yk)
@@ -568,7 +658,7 @@ class FDAlgorithm:
         # to the dense masked round's (finite table, False-by-mask) lanes
         tg, n_own = fd_lib.aggregate_fd(scatter_zeros(tk_m, K, idx),
                                         scatter_zeros(owns_m, K, idx))
-        rngs_m = jnp.take(jax.random.split(rng, K), idx, axis=0)
+        rngs_m = jnp.take(client_keys(rng, ctx, K), idx, axis=0)
 
         def per_client(w, s, o, xk, yk, tkk, rk):
             tgt = fd_lib.distill_targets(tg, tkk, n_own, yk)
@@ -651,13 +741,13 @@ class FedAvgAlgorithm:
             # weighted average multiplies by an exact-zero weight anyway
             idx = active_indices(ctx.mask, ctx.active_budget)
             x_m, y_m = gather_clients((ctx.x, ctx.y), idx)
-            rngs_m = jnp.take(jax.random.split(rng, K), idx, axis=0)
+            rngs_m = jnp.take(client_keys(rng, ctx, K), idx, axis=0)
             wk_m, sk_m, _, losses_m = jax.vmap(per_client)(x_m, y_m, rngs_m)
             wk = jax.tree.map(lambda a: scatter_zeros(a, K, idx), wk_m)
             sk = jax.tree.map(lambda a: scatter_zeros(a, K, idx), sk_m)
             losses = scatter_zeros(losses_m, K, idx)
         else:
-            rngs = jax.random.split(rng, K)
+            rngs = client_keys(rng, ctx, K)
             wk, sk, _, losses = jax.vmap(per_client)(ctx.x, ctx.y, rngs)
         weights = (jnp.ones((K,), jnp.float32)
                    if isinstance(ctx.weights, tuple) else ctx.weights)

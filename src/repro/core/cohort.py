@@ -1,0 +1,152 @@
+"""Host-side client-state store + slab planning for cohort-resident rounds.
+
+The cohort-resident round plane (`BatchCtx.cohort`) keeps only the sampled
+clients on device: a `ClientStore` holds every *previously touched* client's
+state host-side, keyed by global client id, and hands the engine an (S, ...)
+slab at chunk entry / absorbs it back at chunk exit.  Clients that have
+never participated are **lazily initialized** on first gather via
+``init_fn(ids)`` — which, because per-client init keys are a function of the
+global id alone (`core.prng.split_take`), produces bitwise the rows a dense
+up-front ``init`` would have (pinned by ``tests/test_cohort.py``).  Resident
+memory is therefore O(#touched clients) on the host and O(S) on device,
+independent of the fleet size K.
+
+Slab layout (`build_slab` / `slab_ctx_plan`): one fixed-size slab serves a
+whole ``chunk_rounds`` fused scan — the sorted ascending union of the
+chunk's cohort ids, padded to the static size S with duplicates of the
+first id.  Pad lanes carry mask 0 in every round and are dropped before
+write-back, so they can never clobber a real client's stored state; fixing
+S across chunks keeps the engine's treedef/shape-keyed jit caches warm.
+Sorted-ascending real lanes also preserve the dense round's relative lane
+order, which is what lets the slab's cross-client reductions (all
+dot-lowered via `losses.pinned_sum` or exact-zero-lane einsums) reproduce
+the dense masked round bit-for-bit at small K.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import load_pytree, save_pytree
+
+
+class ClientStore:
+    """Host-side id -> client-state rows, with lazy per-id initialization.
+
+    ``init_fn(ids)`` builds a fresh stacked slab for (m,) global ids — e.g.
+    ``lambda ids: algo.init_cohort(rng0, model_init, ids, K)``.  Rows are
+    stored as NumPy leaves (host RAM); `gather` returns stacked NumPy
+    leaves ready to cross into jit.
+    """
+
+    def __init__(self, init_fn: Callable):
+        self.init_fn = init_fn
+        self._rows: dict[int, list] = {}
+        self._treedef = None
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def ids(self) -> np.ndarray:
+        return np.array(sorted(self._rows), np.int64)
+
+    def resident_bytes(self) -> int:
+        """Host bytes of all stored client rows — the number the million-
+        client benchmarks report as resident client-state memory."""
+        return sum(leaf.nbytes for row in self._rows.values() for leaf in row)
+
+    def _ensure_treedef(self):
+        if self._treedef is None:
+            probe = jax.eval_shape(self.init_fn, np.zeros(1, np.int64))
+            self._treedef = jax.tree_util.tree_structure(probe)
+        return self._treedef
+
+    def _insert(self, ids: np.ndarray, slab_leaves: list) -> None:
+        for j, cid in enumerate(ids):
+            self._rows[int(cid)] = [leaf[j] for leaf in slab_leaves]
+
+    def gather(self, ids) -> "jax.typing.ArrayLike":
+        """The stacked (len(ids), ...) slab for the given global ids
+        (duplicates allowed — pad lanes repeat a real id).  Missing ids are
+        initialized through ``init_fn`` in one batched call."""
+        ids = np.asarray(ids, np.int64)
+        missing = np.unique([i for i in ids if int(i) not in self._rows])
+        if missing.size:
+            # pad the init batch to the gather size (the slab size — fixed
+            # across chunks): every distinct batch shape costs a fresh
+            # trace/compile of the vmapped init, and at small K the
+            # collision-dependent |missing| varies chunk to chunk
+            n_miss = int(missing.size)
+            padded = (missing if n_miss >= len(ids) else np.concatenate(
+                [missing, np.full(len(ids) - n_miss, missing[0], np.int64)]))
+            fresh = self.init_fn(padded)
+            leaves, self._treedef = jax.tree_util.tree_flatten(fresh)
+            self._insert(missing, [np.asarray(l)[:n_miss]
+                                   for l in jax.device_get(leaves)])
+        treedef = self._ensure_treedef()
+        stacked = [np.stack([self._rows[int(i)][j] for i in ids])
+                   for j in range(treedef.num_leaves)]
+        return jax.tree_util.tree_unflatten(treedef, stacked)
+
+    def scatter(self, ids, slab, n_real: Optional[int] = None) -> None:
+        """Write slab rows back: lane s's leaves become the stored state of
+        client ``ids[s]``, for s < n_real only — pad lanes (duplicated ids
+        past ``n_real``) never touch the store."""
+        ids = np.asarray(ids, np.int64)
+        n = len(ids) if n_real is None else int(n_real)
+        leaves = [np.asarray(l)
+                  for l in jax.device_get(jax.tree_util.tree_flatten(slab)[0])]
+        self._insert(ids[:n], leaves)
+
+    # ---------------------------------------------------------- checkpoint --
+    def save(self, path: str) -> None:
+        ids = self.ids()
+        if ids.size == 0:
+            save_pytree(path, {"ids": ids, "leaves": []})
+            return
+        stacked = self.gather(ids)
+        save_pytree(path, {"ids": ids,
+                           "leaves": jax.tree_util.tree_flatten(stacked)[0]})
+
+    def load(self, path: str) -> None:
+        raw = load_pytree(path)
+        self._rows.clear()
+        ids = np.asarray(raw["ids"], np.int64)
+        if ids.size:
+            self._insert(ids, [np.asarray(l) for l in raw["leaves"]])
+
+
+# ------------------------------------------------------------ slab planning --
+def build_slab(cohorts: list[np.ndarray], slab_size: int):
+    """(padded_ids (S,), n_real) for one chunk: the sorted ascending union
+    of the chunk's cohort id arrays, padded to the *static* ``slab_size``
+    with duplicates of the first id (mask-0 in every round, excluded from
+    write-back).  ``slab_size`` must be >= the union size — callers fix it
+    at ``chunk_rounds * active_budget`` (capped at K), the union's maximum."""
+    union = np.unique(np.concatenate([np.asarray(c, np.int64)
+                                      for c in cohorts]))
+    n_real = int(union.size)
+    if n_real > slab_size:
+        raise ValueError(f"slab_size {slab_size} < {n_real} distinct "
+                         f"cohort ids in this chunk")
+    pad = np.full(slab_size - n_real, union[0] if n_real else 0, np.int64)
+    return np.concatenate([union, pad]), n_real
+
+
+def slab_ctx_plan(plans, slab_ids: np.ndarray, n_real: int) -> dict:
+    """Densify a chunk of cohort plans onto the slab: (k, S) ``mask`` /
+    ``stale`` ctx-plan arrays (NumPy; `CohortRunner` converts) where lane s
+    of round i is 1 iff ``slab_ids[s]`` is in plan i's cohort.  Pad lanes
+    (s >= n_real) stay 0 — their ids duplicate lane 0's, so membership is
+    resolved by lane position, never by id."""
+    k, S = len(plans), len(slab_ids)
+    mask = np.zeros((k, S), np.float32)
+    stale = np.zeros((k, S), np.int32)
+    real = slab_ids[:n_real]
+    for i, p in enumerate(plans):
+        lanes = np.searchsorted(real, np.asarray(p.ids, np.int64))
+        mask[i, lanes] = 1.0
+        stale[i, lanes] = np.asarray(p.staleness, np.int32)
+    return {"mask": mask, "stale": stale}

@@ -207,17 +207,20 @@ class FedEngine:
         return self.algo.init(rng, model_init, data)
 
     def make_ctx(self, data, o_idx=EMPTY, weights=EMPTY,
-                 active_budget=None) -> BatchCtx:
+                 active_budget=None, cohort=EMPTY,
+                 population=None) -> BatchCtx:
         open_x = data.open_x if self.algo.uses_open else EMPTY
         return BatchCtx(x=data.x_clients, y=data.y_clients,
                         open_x=open_x, o_idx=o_idx, weights=weights,
-                        active_budget=active_budget)
+                        cohort=cohort, active_budget=active_budget,
+                        population=population)
 
     # --------------------------------------------------------------- run ----
     def run(self, state: RoundState, data, rounds: Optional[int] = None,
             weights=EMPTY, log_every: int = 1,
             start_round: Optional[int] = None, chunk_rounds: int = 1,
-            ctx_plan=None, active_budget: Optional[int] = None) -> RoundState:
+            ctx_plan=None, active_budget: Optional[int] = None,
+            cohort=EMPTY, population: Optional[int] = None) -> RoundState:
         """Run ``rounds`` federated rounds starting at ``start_round``
         (default: ``self.rounds_done``, which ``load_state`` restores from a
         checkpoint).  The per-round RNG chain is fast-forwarded past the
@@ -240,7 +243,15 @@ class FedEngine:
         instead of the full K-stack — bitwise identical, ~K/m cheaper.  It
         is static (BatchCtx metadata), so it composes with ``chunk_rounds``
         and ``ctx_plan``; the caller guarantees every served mask has at
-        most m participants (`repro.sim` schedulers do, by construction)."""
+        most m participants (`repro.sim` schedulers do, by construction).
+
+        ``cohort``/``population`` run the rounds cohort-resident: ``data``
+        and ``state.clients`` carry an (S, ...) slab over the (S,) global
+        ids in ``cohort``, and ``population`` is the true fleet size K used
+        for per-client key derivation (see ``BatchCtx``).  The engine's own
+        machinery — treedef-keyed round caches, fused scan, ctx plans,
+        sparse budget — is oblivious to the distinction; the host-side
+        slab orchestration lives in `repro.sim.runner.CohortRunner`."""
         hp = self.algo.hp
         rounds = hp.rounds if rounds is None else rounds
         start = self.rounds_done if start_round is None else start_round
@@ -292,14 +303,15 @@ class FedEngine:
                     stacklevel=2)
             return self._run_scanned(state, data, rounds, weights, log_every,
                                      start, rng, chunk, ctx_plan, n_open, n_r,
-                                     active_budget)
+                                     active_budget, cohort, population)
         fn = None
         for r in range(start, start + rounds):
             rng, rk, ri = jax.random.split(rng, 3)
             o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
                      if self.algo.uses_open else EMPTY)
             ctx = self.make_ctx(data, o_idx=o_idx, weights=weights,
-                                active_budget=active_budget)
+                                active_budget=active_budget, cohort=cohort,
+                                population=population)
             if ctx_plan is not None:
                 ctx = dataclasses.replace(
                     ctx, **{f: v[r - start] for f, v in ctx_plan.items()})
@@ -340,8 +352,8 @@ class FedEngine:
         return chunk
 
     def _run_scanned(self, state, data, rounds, weights, log_every, start,
-                     rng, chunk, ctx_plan, n_open, n_r,
-                     active_budget=None) -> RoundState:
+                     rng, chunk, ctx_plan, n_open, n_r, active_budget=None,
+                     cohort=EMPTY, population=None) -> RoundState:
         r, end = start, start + rounds
         while r < end:
             k = min(chunk, end - r)
@@ -353,7 +365,8 @@ class FedEngine:
                     {f: v[r - start:r - start + k]
                      for f, v in ctx_plan.items()})
             ctx0 = self.make_ctx(data, weights=weights,
-                                 active_budget=active_budget)
+                                 active_budget=active_budget, cohort=cohort,
+                                 population=population)
             fn = self._get_chunk(k, n_open, n_r, state, ctx0, plan)
             state, rng, ms = fn(state, ctx0, rng, plan)
             self.last_metrics = {key: v[-1] for key, v in ms.items()}

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from ..models.api import model_logits
 from ..models.base import ModelConfig
 from .aggregation import era, sa, topk_compress, weighted_era, weighted_sa
+from .hierarchy import hierarchical_weighted_era, hierarchical_weighted_sa
 from .algorithms import (active_indices, gather_clients, masked_mean,
                          scatter_clients, scatter_zeros, select_clients)
 from .losses import (distill_xent, pinned_sum, topk_distill_xent,
@@ -36,6 +37,7 @@ class LLMDsflHP:
     gamma: float = 1.0              # weight of the distillation term
     temperature: float = 0.1        # ERA
     aggregation: str = "era"        # sa | era
+    agg_edges: int = 1              # two-level ERA tree width (core.hierarchy)
     aux_weight: float = 0.01        # MoE load-balance loss
     topk: int | None = None         # sparsified logit exchange (beyond paper)
     microbatches: int = 1           # gradient accumulation (activation peak /m)
@@ -242,8 +244,21 @@ def _dsfl_round_sparse(cfg: ModelConfig, stacked_params, private_batches,
 
 def _aggregate_teacher(probs, hp: LLMDsflHP, weights):
     """sa/era over the client axis; the weighted variants zero out absent
-    clients and decay stale ones when the sim supplies ``weights``."""
-    if weights is None:
+    clients and decay stale ones when the sim supplies ``weights``.
+    ``hp.agg_edges > 1`` reduces the client axis through the two-level
+    edge -> server tree (`core.hierarchy`) — on a pod-sharded client axis
+    each edge's partial sum is shard-local, so the cross-pod exchange
+    carries n_edges (n, S, V) partials instead of K upload stacks.  The
+    parity/tolerance contract is `core.hierarchy`'s: bitwise at one edge,
+    pinned tolerance deeper."""
+    if hp.agg_edges > 1:
+        w = (jnp.ones((probs.shape[0],), jnp.float32)
+             if weights is None else weights)
+        agg = (hierarchical_weighted_era(probs, w, hp.temperature,
+                                         hp.agg_edges)
+               if hp.aggregation == "era"
+               else hierarchical_weighted_sa(probs, w, hp.agg_edges))
+    elif weights is None:
         agg = era(probs, hp.temperature) if hp.aggregation == "era" \
             else sa(probs)
     else:

@@ -46,6 +46,75 @@ def build_image_task(seed: int, K: int, n_private: int, n_open: int,
     return FederatedImageTask(xc, yc, open_x, x_test, y_test, n_classes)
 
 
+# -------------------------------------------------- cohort data providers ----
+@dataclass
+class SlabTask:
+    """An (S, ...)-slab data view with `FederatedImageTask`'s field names,
+    so ``FedEngine.make_ctx`` reads a cohort slab exactly like a dense
+    population — only the leading client axis means "slab lane" instead of
+    "client id" (the mapping lives in ``BatchCtx.cohort``)."""
+    x_clients: jax.Array
+    y_clients: jax.Array
+    open_x: jax.Array
+    x_test: jax.Array = None
+    y_test: jax.Array = None
+    n_classes: int = 10
+
+
+class ArrayProvider:
+    """Cohort data provider over an in-memory dense task: ``slab(ids)``
+    gathers the requested client rows.  The parity provider — a cohort run
+    over it sees bitwise the rows a dense run sees (tests/test_cohort.py);
+    real fleet-scale runs use a per-id generator like `SyntheticProvider`."""
+
+    def __init__(self, task: FederatedImageTask):
+        self.task = task
+        self.n_clients = int(task.x_clients.shape[0])
+
+    def slab(self, ids) -> SlabTask:
+        import numpy as np
+        ids = jnp.asarray(np.asarray(ids, np.int64))
+        t = self.task
+        return SlabTask(jnp.take(t.x_clients, ids, axis=0),
+                        jnp.take(t.y_clients, ids, axis=0),
+                        t.open_x, t.x_test, t.y_test, t.n_classes)
+
+
+class SyntheticProvider:
+    """Per-id on-demand synthetic image shards: client g's private data is a
+    deterministic function of ``(seed, g)`` alone (``fold_in`` key), so a
+    million-client fleet costs no data memory until a client is actually
+    sampled — the provider the headline ``examples/sim_stragglers.py
+    --clients 1000000`` run uses.  The shared open/test sets materialize
+    once (they are O(1) in K)."""
+
+    def __init__(self, seed: int, n_clients: int, n_per_client: int,
+                 n_open: int, n_test: int = 0, hw: int = 16,
+                 n_classes: int = 10):
+        self.n_clients = int(n_clients)
+        self.n_classes = n_classes
+        key = jax.random.PRNGKey(seed)
+        kp, ko, kt = jax.random.split(key, 3)
+        self._kp = kp
+        open_x, _ = synthetic.make_digits(ko, n_open, n_classes, hw)
+        self.open_x = open_x
+        if n_test:
+            self.x_test, self.y_test = synthetic.make_digits(
+                kt, n_test, n_classes, hw)
+        else:
+            self.x_test = self.y_test = None
+        self._gen = jax.jit(jax.vmap(
+            lambda k: synthetic.make_digits(k, n_per_client, n_classes, hw)))
+
+    def slab(self, ids) -> SlabTask:
+        import numpy as np
+        ids = jnp.asarray(np.asarray(ids, np.int64), jnp.uint32)
+        keys = jax.vmap(lambda i: jax.random.fold_in(self._kp, i))(ids)
+        xc, yc = self._gen(keys)
+        return SlabTask(xc, yc, self.open_x, self.x_test, self.y_test,
+                        self.n_classes)
+
+
 @dataclass
 class FederatedLMTask:
     """LLM-scale federated task for `FedEngine`: batch dicts of token arrays

@@ -6,15 +6,19 @@ heterogeneous link rates, straggler deadlines, buffered-async aggregation
 with staleness-decayed weights, and a virtual clock charged from *measured*
 wire bytes.  See `runner.SimRunner` for the entry point.
 """
-from .clients import (ClientPopulation, SAMPLERS, sample_available,
-                      sample_uniform)
-from .clock import RoundTiming, VirtualClock
+from .clients import (COHORT_SAMPLERS, ClientPopulation, SAMPLERS,
+                      cohort_available, cohort_uniform, floyd_sample,
+                      sample_available, sample_uniform)
+from .clock import CohortTiming, RoundTiming, VirtualClock
 from .history import SimHistory
-from .runner import SimRunner
-from .scheduler import AsyncBufferScheduler, RoundPlan, SyncScheduler
+from .runner import CohortRunner, SimRunner
+from .scheduler import (AsyncBufferScheduler, CohortPlan, RoundPlan,
+                        SyncScheduler)
 
 __all__ = [
-    "AsyncBufferScheduler", "ClientPopulation", "RoundPlan", "RoundTiming",
+    "AsyncBufferScheduler", "COHORT_SAMPLERS", "ClientPopulation",
+    "CohortPlan", "CohortRunner", "CohortTiming", "RoundPlan", "RoundTiming",
     "SAMPLERS", "SimHistory", "SimRunner", "SyncScheduler", "VirtualClock",
-    "sample_available", "sample_uniform",
+    "cohort_available", "cohort_uniform", "floyd_sample", "sample_available",
+    "sample_uniform",
 ]

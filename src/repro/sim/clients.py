@@ -40,6 +40,28 @@ class ClientPopulation:
         return (down_bytes / self.downlink + self.compute_time
                 + up_bytes / self.uplink)
 
+    def latency_ids(self, ids: np.ndarray, up_bytes: float,
+                    down_bytes: float) -> np.ndarray:
+        """`latency` restricted to the (m,) global ids of one cohort — the
+        O(m) path the cohort schedulers charge, which never materializes a
+        K-length latency workspace."""
+        ids = np.asarray(ids, np.int64)
+        return (down_bytes / self.downlink[ids] + self.compute_time[ids]
+                + up_bytes / self.uplink[ids])
+
+    def availability_cdf(self) -> np.ndarray:
+        """Cumulative availability weights, built once (O(K)) and cached so
+        every weighted draw is an O(log K) ``searchsorted`` instead of the
+        O(K) normalization scan ``rng.choice(p=...)`` performs per call.
+        The cache keys on the identity of the ``availability`` array:
+        replacing the attribute invalidates it; in-place edits
+        (``pop.availability[:] = ...``) require dropping ``_avail_cdf``."""
+        cached = getattr(self, "_avail_cdf", None)
+        if cached is None or cached[0] is not self.availability:
+            self._avail_cdf = (self.availability,
+                               np.cumsum(self.availability))
+        return self._avail_cdf[1]
+
     # ----------------------------------------------------------- factories --
     @classmethod
     def uniform(cls, K: int, compute_time: float = 1.0,
@@ -68,6 +90,67 @@ class ClientPopulation:
 
 
 # ------------------------------------------------- participation samplers ----
+def _cohort_size(K: int, fraction: float) -> int:
+    return min(K, max(1, int(round(fraction * K))))
+
+
+def floyd_sample(rng: np.random.Generator, K: int, m: int) -> np.ndarray:
+    """Floyd's algorithm: m distinct uniform draws from [0, K) in O(m) time
+    and memory — no K-length permutation/workspace, so drawing 100 of 10^6
+    clients costs the same as 100 of 10^3.  Returns sorted ids."""
+    if m >= K:
+        return np.arange(K, dtype=np.int64)
+    chosen = set()
+    for j in range(K - m, K):
+        t = int(rng.integers(0, j + 1))
+        chosen.add(j if t in chosen else t)
+    return np.fromiter(sorted(chosen), np.int64, len(chosen))
+
+
+def weighted_draw_ids(rng: np.random.Generator, pop: ClientPopulation,
+                      n: int) -> np.ndarray:
+    """n availability-weighted draws (with replacement) via the cached CDF:
+    O(n log K) per call after the one-time O(K) ``availability_cdf`` build."""
+    cdf = pop.availability_cdf()
+    u = rng.random(n) * cdf[-1]
+    return np.searchsorted(cdf, u, side="right").astype(np.int64)
+
+
+def cohort_uniform(rng: np.random.Generator, pop: ClientPopulation,
+                   fraction: float = 1.0) -> np.ndarray:
+    """Uniform cohort draw returning sorted (m,) global ids — the O(m log K)
+    counterpart of `sample_uniform` (same exact cohort size, no (K,) mask)."""
+    K = pop.n_clients
+    return floyd_sample(rng, K, _cohort_size(K, fraction))
+
+
+def cohort_available(rng: np.random.Generator, pop: ClientPopulation,
+                     fraction: float = 1.0) -> np.ndarray:
+    """Availability-weighted cohort draw returning sorted (<= m,) global
+    ids.  Two stages, mirroring `sample_available`'s model without its
+    per-draw O(K) scans: candidates come from the cached-CDF weighted draw
+    (who the server *tries*), and each candidate answers w.p. its
+    availability (the reachability coin).  Distinctness by rejection, with
+    a bounded attempt budget; if nobody answers, fall back to the single
+    most-available client so a round is never empty."""
+    K = pop.n_clients
+    m = _cohort_size(K, fraction)
+    picked: set[int] = set()
+    attempts, budget = 0, max(16 * m, 64)
+    while len(picked) < m and attempts < budget:
+        n = min(budget - attempts, max(m - len(picked), 8))
+        cand = weighted_draw_ids(rng, pop, n)
+        accept = rng.random(n) < pop.availability[cand]
+        picked.update(int(c) for c in cand[accept])
+        attempts += n
+    if not picked:
+        picked = {int(np.argmax(pop.availability))}
+    return np.fromiter(sorted(picked), np.int64, len(picked))[:m]
+
+
+COHORT_SAMPLERS = {"uniform": cohort_uniform, "available": cohort_available}
+
+
 def sample_uniform(rng: np.random.Generator, pop: ClientPopulation,
                    fraction: float = 1.0) -> np.ndarray:
     """Uniform-K sampling: exactly ``max(1, round(fraction * K))`` clients,
@@ -84,22 +167,16 @@ def sample_uniform(rng: np.random.Generator, pop: ClientPopulation,
 
 def sample_available(rng: np.random.Generator, pop: ClientPopulation,
                      fraction: float = 1.0) -> np.ndarray:
-    """Availability-weighted sampling: each client is reachable w.p. its
-    availability; among the reachable, up to ``round(fraction * K)`` are
-    selected with probability proportional to availability.  Falls back to
-    the single most-available client if nobody is reachable."""
-    K = pop.n_clients
-    reachable = rng.random(K) < pop.availability
-    if not reachable.any():
-        reachable = np.zeros(K, bool)
-        reachable[int(np.argmax(pop.availability))] = True
-    k = max(1, int(round(fraction * K)))
-    idx = np.flatnonzero(reachable)
-    if len(idx) > k:
-        p = pop.availability[idx] / pop.availability[idx].sum()
-        idx = rng.choice(idx, size=k, replace=False, p=p)
-    mask = np.zeros(K, bool)
-    mask[idx] = True
+    """Availability-weighted sampling: candidates are drawn proportional to
+    availability and each answers with probability its availability; falls
+    back to the single most-available client if nobody answers.  The draw
+    itself is `cohort_available` — O(m log K) per call against the cached
+    availability CDF, where the previous implementation re-ran two O(K)
+    scans (a K-wide reachability coin flip plus ``rng.choice(p=...)``'s
+    normalization) on *every* round.  Only the returned (K,) mask is still
+    dense; cohort-resident callers take the id form directly."""
+    mask = np.zeros(pop.n_clients, bool)
+    mask[cohort_available(rng, pop, fraction)] = True
     return mask
 
 

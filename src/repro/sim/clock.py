@@ -24,6 +24,16 @@ class RoundTiming:
     dropped: np.ndarray        # (K,) bool — selected but past the deadline
 
 
+@dataclass(frozen=True)
+class CohortTiming:
+    """`RoundTiming`'s O(m) form: arrays align with a cohort's (m,) ids
+    instead of the (K,) population."""
+    duration: float
+    latency: np.ndarray        # (m,) per-member full-leg latency
+    on_time: np.ndarray        # (m,) bool
+    dropped: np.ndarray        # (m,) bool
+
+
 @dataclass
 class VirtualClock:
     """Monotone virtual time.  ``now`` is checkpointed by `SimRunner` so a
@@ -64,3 +74,27 @@ class VirtualClock:
             duration = float(np.max(lat[on_time]))
         self.advance(duration)
         return RoundTiming(duration, lat, on_time, dropped)
+
+    def charge_cohort(self, latency: np.ndarray,
+                      deadline: float | None = None) -> CohortTiming:
+        """`charge_sync_round` over a cohort's (m,) latencies — identical
+        deadline/forced-keep/duration semantics, but every array is cohort-
+        sized: the million-client path charges m members, never K lanes."""
+        lat = np.asarray(latency, np.float64)
+        m = lat.shape[0]
+        if deadline is None:
+            on_time = np.ones(m, bool)
+        else:
+            on_time = lat <= deadline
+            if m and not on_time.any():
+                on_time = np.zeros(m, bool)
+                on_time[int(np.argmin(lat))] = True
+        dropped = ~on_time if m else np.zeros(0, bool)
+        if m == 0:
+            duration = 0.0
+        elif dropped.any():
+            duration = float(max(deadline, np.min(lat[on_time])))
+        else:
+            duration = float(np.max(lat[on_time]))
+        self.advance(duration)
+        return CohortTiming(duration, lat, on_time, dropped)

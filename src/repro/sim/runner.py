@@ -23,10 +23,12 @@ import os
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.algorithms import EMPTY, RoundState
+from ..core.algorithms import ClientState, EMPTY, RoundState
+from ..core.cohort import ClientStore, build_slab, slab_ctx_plan
 from ..core.engine import FedEngine
 from .history import SimHistory
 from .scheduler import RoundPlan
@@ -187,6 +189,149 @@ class SimRunner:
     def load_state(self, path: str, like: RoundState,
                    shardings=None) -> RoundState:
         state = self.engine.load_state(path, like, shardings=shardings)
+        sidecar = self._sidecar(path)
+        if os.path.exists(sidecar):
+            with open(sidecar) as f:
+                raw = json.load(f)
+            self.scheduler.set_state(raw["scheduler"])
+            self.history = SimHistory(records=raw["history"])
+            self.cum_bytes = int(raw["cum_bytes"])
+        return state
+
+
+@dataclass
+class CohortRunner:
+    """Cohort-resident federation: `SimRunner`'s million-client form.
+
+    Nothing in the hot path is O(K): the scheduler plans `CohortPlan`s (id
+    arrays, O(m log K) draws), client state lives host-side in a
+    `core.cohort.ClientStore` keyed by global id (lazily initialized, so
+    untouched clients cost nothing), per-chunk data comes from a provider's
+    ``slab(ids)``, and the engine runs its ordinary fused rounds over an
+    (S,)-lane slab with ``BatchCtx.cohort`` carrying the id→lane mapping.
+    At small K this is **bitwise identical** to `SimRunner`'s dense masked
+    rounds fed the same plans (tests/test_cohort.py) — the house invariant
+    that pins the refactor layer by layer.
+
+    ``state`` passed to ``run`` holds only the server side (e.g.
+    ``algo.init_server``); slabs stream through it per chunk.  ``store`` is
+    None for algorithms with ephemeral client state (FedAvg)."""
+    engine: FedEngine
+    scheduler: Any
+    provider: Any                       # ArrayProvider | SyntheticProvider
+    store: Optional[ClientStore] = None
+    seed: int = 0
+    history: SimHistory = field(default_factory=SimHistory)
+    cum_bytes: int = 0
+    peak_slab_bytes: int = 0
+    _leg_bytes: Optional[tuple] = None
+
+    def resident_bytes(self) -> int:
+        """Host bytes of all stored client state — the resident-memory
+        number the population-scaling benchmark tracks (flat in K)."""
+        return 0 if self.store is None else self.store.resident_bytes()
+
+    def _probe_state(self, state: RoundState) -> RoundState:
+        """A 1-lane slab state for byte measurement (`measured_leg_bytes`
+        only eval_shapes the payload, but needs a client lane to exist)."""
+        if self.store is None:
+            return state
+        return dataclasses.replace(state,
+                                   clients=self.store.gather(np.zeros(1)))
+
+    def run(self, state: RoundState, rounds: Optional[int] = None,
+            weights=EMPTY, log_every: int = 1,
+            chunk_rounds: int = 1) -> RoundState:
+        """Drive ``rounds`` virtual rounds, ``chunk_rounds`` at a time: each
+        chunk's cohorts are planned up front, their sorted union becomes one
+        fixed-size slab (static S = chunk_rounds * scheduler.active_budget,
+        so the engine's jit caches stay warm across chunks), and the whole
+        chunk runs as one fused scan with the (k, S) mask/stale plan.
+        Participation sparsity inside the slab reuses the engine's
+        ``active_budget`` plane when the per-round bound is below S."""
+        eng = self.engine
+        sched = self.scheduler
+        rounds = eng.algo.hp.rounds if rounds is None else rounds
+        K = sched.population.n_clients
+        budget = int(getattr(sched, "active_budget", K))
+        if self._leg_bytes is None:
+            self._leg_bytes = eng.measured_leg_bytes(
+                self._probe_state(state), self.provider.slab(np.zeros(1)))
+        up_bytes, down_bytes = self._leg_bytes
+        done = 0
+        while done < rounds:
+            k = min(chunk_rounds, rounds - done)
+            r0 = eng.rounds_done
+            plans = [sched.next_cohort(
+                np.random.default_rng([self.seed, r0 + i]),
+                up_bytes, down_bytes) for i in range(k)]
+            S = min(K, k * budget)
+            slab_ids, n_real = build_slab([p.ids for p in plans], S)
+            plan_np = slab_ctx_plan(plans, slab_ids, n_real)
+            clients = (self.store.gather(slab_ids) if self.store is not None
+                       else state.clients)
+            sstate = dataclasses.replace(state, clients=clients)
+            self.peak_slab_bytes = max(self.peak_slab_bytes, sum(
+                np.asarray(l).nbytes
+                for l in jax.tree_util.tree_leaves(clients)))
+            n_hist = len(eng.history)
+            sstate = eng.run(
+                sstate, self.provider.slab(slab_ids), rounds=k,
+                weights=weights, log_every=log_every, chunk_rounds=k,
+                ctx_plan={"mask": jnp.asarray(plan_np["mask"]),
+                          "stale": jnp.asarray(plan_np["stale"])},
+                active_budget=(budget if budget < S else None),
+                cohort=jnp.asarray(slab_ids), population=K)
+            if self.store is not None:
+                self.store.scatter(slab_ids, sstate.clients, n_real)
+            state = dataclasses.replace(sstate, clients=state.clients)
+            eng_recs = {rec["round"]: rec for rec in eng.history[n_hist:]}
+            for i, plan in enumerate(plans):
+                self.cum_bytes += (up_bytes * plan.n_participants
+                                   + down_bytes)
+                rec = {"round": r0 + i + 1,
+                       "t_round": plan.duration, "t_cum": plan.t_end,
+                       "participants": plan.n_participants,
+                       "dropped": int(plan.dropped_ids.size),
+                       "mean_staleness": float(
+                           plan.staleness.mean() if plan.ids.size else 0.0),
+                       "up_bytes": up_bytes * plan.n_participants,
+                       "down_bytes": down_bytes,
+                       "cum_bytes": self.cum_bytes,
+                       "resident_bytes": self.resident_bytes()}
+                eng_rec = eng_recs.get(r0 + i + 1)
+                if eng_rec is not None:
+                    rec.update({k2: v for k2, v in eng_rec.items()
+                                if k2 not in rec})
+                self.history.append(rec)
+            done += k
+        return state
+
+    # ------------------------------------------------------- checkpointing --
+    def _sidecar(self, path: str) -> str:
+        return path + ".sim.json"
+
+    def _store_path(self, path: str) -> str:
+        return path + ".store"
+
+    def save_state(self, path: str, state: RoundState) -> None:
+        """Three-part checkpoint: engine state (the server side + round
+        counter/history), the host-side client store, and the sim sidecar
+        (scheduler books incl. virtual clock, sim history, byte ledger)."""
+        self.engine.save_state(path, state)
+        if self.store is not None:
+            self.store.save(self._store_path(path))
+        with open(self._sidecar(path), "w") as f:
+            json.dump({"scheduler": self.scheduler.state(),
+                       "history": self.history.records,
+                       "cum_bytes": self.cum_bytes,
+                       "seed": self.seed}, f, default=float)
+
+    def load_state(self, path: str, like: RoundState,
+                   shardings=None) -> RoundState:
+        state = self.engine.load_state(path, like, shardings=shardings)
+        if self.store is not None and os.path.exists(self._store_path(path)):
+            self.store.load(self._store_path(path))
         sidecar = self._sidecar(path)
         if os.path.exists(sidecar):
             with open(sidecar) as f:

@@ -20,12 +20,13 @@ the same wallclock axis.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .clients import SAMPLERS, ClientPopulation
+from .clients import COHORT_SAMPLERS, SAMPLERS, ClientPopulation
 from .clock import VirtualClock
 
 
@@ -47,6 +48,37 @@ class RoundPlan:
         return int(self.mask.sum())
 
 
+@dataclass(frozen=True)
+class CohortPlan:
+    """`RoundPlan`'s O(m) form: sorted global ids instead of (K,) arrays —
+    the only participation record the cohort-resident path ever holds, so
+    planning a round costs O(m log K) regardless of fleet size.  Densify
+    with ``dense_mask`` only in small-K parity tests."""
+    ids: np.ndarray            # (m,) int64 sorted — whose upload aggregates
+    staleness: np.ndarray      # (m,) int64 aligned with ``ids``
+    t_start: float
+    t_end: float
+    dropped_ids: np.ndarray    # (d,) int64 — selected but cut by the deadline
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+    @property
+    def n_participants(self) -> int:
+        return int(self.ids.size)
+
+    def dense_mask(self, K: int) -> np.ndarray:
+        mask = np.zeros(K, bool)
+        mask[self.ids] = True
+        return mask
+
+    def dense_staleness(self, K: int) -> np.ndarray:
+        stale = np.zeros(K, np.int64)
+        stale[self.ids] = self.staleness
+        return stale
+
+
 @dataclass
 class SyncScheduler:
     """Synchronous deadline rounds over a `ClientPopulation`.
@@ -66,6 +98,8 @@ class SyncScheduler:
     clock: VirtualClock = field(default_factory=VirtualClock)
     _pending_since: np.ndarray = None    # (K,) agg round a late upload is
     #                                      from; -1 = no pending upload
+    _pending: dict = None                # cohort path: {id: agg round} — the
+    #                                      O(#pending) form of the same book
     _round: int = 0
 
     # sync participation depends only on the per-round rng and the measured
@@ -82,6 +116,8 @@ class SyncScheduler:
         if self._pending_since is None:
             self._pending_since = np.full(self.population.n_clients, -1,
                                           np.int64)
+        if self._pending is None:
+            self._pending = {}
 
     @property
     def idealized(self) -> bool:
@@ -124,15 +160,51 @@ class SyncScheduler:
         self._round += 1
         return RoundPlan(mask, staleness, t0, self.clock.now, timing.dropped)
 
+    def next_cohort(self, rng: np.random.Generator, up_bytes: float,
+                    down_bytes: float) -> CohortPlan:
+        """`next_round`'s O(m log K) form: the cohort is drawn as ids
+        (`clients.COHORT_SAMPLERS` — Floyd / cached-CDF, no K-length
+        workspace), latency is charged for the m members only, and the
+        late-upload book is a dict keyed by id.  Same deadline / straggler
+        semantics; the sampler draws differ from `next_round`'s mask
+        samplers (different rng consumption), so the two forms describe
+        the same fleet model, not the same realized rounds."""
+        pop = self.population
+        t0 = self.clock.now
+        cohort = COHORT_SAMPLERS[self.sampler](rng, pop, self.fraction)
+        timing = self.clock.charge_cohort(
+            pop.latency_ids(cohort, up_bytes, down_bytes), self.deadline)
+        on_time = cohort[timing.on_time]
+        dropped = cohort[timing.dropped]
+
+        # pending late uploads join this aggregation, stale by their lag;
+        # a client both pending and freshly on-time keeps the pending lag
+        # (mirrors the dense book, which overwrites fresh staleness 0)
+        stale_of = {int(i): self._round - since
+                    for i, since in self._pending.items()}
+        self._pending.clear()
+        ids = np.union1d(on_time, np.fromiter(stale_of, np.int64,
+                                              len(stale_of)))
+        staleness = np.array([stale_of.get(int(i), 0) for i in ids], np.int64)
+        if self.straggler == "admit":
+            for i in dropped:
+                self._pending[int(i)] = self._round
+        self._round += 1
+        return CohortPlan(ids, staleness, t0, self.clock.now, dropped)
+
     # ---------------------------------------------------------- checkpoint --
     def state(self) -> dict:
         return {"now": self.clock.now, "round": self._round,
-                "pending_since": self._pending_since.tolist()}
+                "pending_since": self._pending_since.tolist(),
+                "pending": {str(k): int(v)
+                            for k, v in self._pending.items()}}
 
     def set_state(self, s: dict) -> None:
         self.clock.now = float(s["now"])
         self._round = int(s["round"])
         self._pending_since = np.asarray(s["pending_since"], np.int64)
+        self._pending = {int(k): int(v)
+                         for k, v in s.get("pending", {}).items()}
 
 
 @dataclass
@@ -152,6 +224,8 @@ class AsyncBufferScheduler:
     _arrival: np.ndarray = None          # (K,) next upload landing time
     _labels_from: np.ndarray = None      # (K,) label version each client
     #                                      trains against
+    _heap: list = None                   # cohort path: (arrival, id) heap —
+    #                                      O(K) once, O(M log K) per round
     _round: int = 0
 
     idealized = False   # masks/staleness are structural in async mode
@@ -201,12 +275,44 @@ class AsyncBufferScheduler:
         return RoundPlan(mask, staleness, t0, self.clock.now,
                          np.zeros(K, bool))
 
+    def next_cohort(self, rng: np.random.Generator, up_bytes: float,
+                    down_bytes: float) -> CohortPlan:
+        """`next_round`'s heap form: the arrival queue is a binary heap of
+        ``(time, id)`` built once (O(K) — every client trains continuously,
+        so all K arrival times are structural async state), and each
+        aggregation pops/re-arms only the M buffer members — O(M log K) per
+        round instead of the dense path's fresh (K,)-argsort.  Ties break
+        on the lower id, matching the stable argsort.  Use either form on
+        one scheduler instance, not both (separate arrival books)."""
+        pop = self.population
+        if self._heap is None:           # everyone starts training at t=0
+            lat = self._latency(rng, up_bytes, down_bytes)
+            self._heap = [(float(t), i) for i, t in enumerate(lat)]
+            heapq.heapify(self._heap)
+        t0 = self.clock.now
+        popped = [heapq.heappop(self._heap)
+                  for _ in range(self.buffer_size)]
+        self.clock.advance(max(0.0, max(t for t, _ in popped) - t0))
+        ids = np.array(sorted(i for _, i in popped), np.int64)
+        staleness = self._round - self._labels_from[ids]
+        self._labels_from[ids] = self._round + 1
+        lat = pop.latency_ids(ids, up_bytes, down_bytes)
+        if self.jitter_sigma > 0:
+            lat = lat * rng.lognormal(0.0, self.jitter_sigma, ids.size)
+        for i, t in zip(ids, lat):
+            heapq.heappush(self._heap, (self.clock.now + float(t), int(i)))
+        self._round += 1
+        return CohortPlan(ids, staleness, t0, self.clock.now,
+                          np.zeros(0, np.int64))
+
     # ---------------------------------------------------------- checkpoint --
     def state(self) -> dict:
         return {"now": self.clock.now, "round": self._round,
                 "arrival": (None if self._arrival is None
                             else self._arrival.tolist()),
-                "labels_from": self._labels_from.tolist()}
+                "labels_from": self._labels_from.tolist(),
+                "heap": (None if self._heap is None
+                         else [[t, int(i)] for t, i in self._heap])}
 
     def set_state(self, s: dict) -> None:
         self.clock.now = float(s["now"])
@@ -214,3 +320,8 @@ class AsyncBufferScheduler:
         self._arrival = (None if s["arrival"] is None
                          else np.asarray(s["arrival"], np.float64))
         self._labels_from = np.asarray(s["labels_from"], np.int64)
+        heap = s.get("heap")
+        self._heap = (None if heap is None
+                      else [(float(t), int(i)) for t, i in heap])
+        if self._heap is not None:
+            heapq.heapify(self._heap)

@@ -425,6 +425,57 @@ def test_round_cache_rebuilds_when_ctx_structure_changes(task):
     assert len(eng._round_cache) == 2               # one round per treedef
 
 
+# ----------------------------------------------- cohort checkpoint/resume ---
+def _cohort_runner(task, store_rng):
+    from repro.core.cohort import ClientStore
+    from repro.data.pipeline import ArrayProvider
+    from repro.sim import CohortRunner
+
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    eng = FedEngine(algo)
+    pop = ClientPopulation.lognormal(3, K, compute_sigma=0.8)
+    sched = SyncScheduler(pop, fraction=0.5, deadline=4.0, straggler="admit")
+    store = ClientStore(
+        lambda ids: algo.init_cohort(store_rng, _init, ids, K))
+    return CohortRunner(engine=eng, scheduler=sched,
+                        provider=ArrayProvider(task), store=store, seed=0)
+
+
+def test_cohort_checkpoint_roundtrip_across_chunk_boundary(task, tmp_path):
+    """Satellite pin: a `CohortRunner` checkpoint taken at a chunk boundary
+    — engine state, host-side client store, scheduler books — resumes onto
+    the uninterrupted run bitwise: server state, every stored client row,
+    the sim ledger and the virtual clock."""
+    rng0 = jax.random.PRNGKey(HP.seed)
+    full = _cohort_runner(task, rng0)
+    algo = full.engine.algo
+    s_full = full.run(algo.init_server(rng0, _init), rounds=6,
+                      chunk_rounds=2)
+
+    first = _cohort_runner(task, rng0)
+    mid = first.run(algo.init_server(rng0, _init), rounds=4, chunk_rounds=2)
+    path = os.path.join(tmp_path, "cohort.msgpack")
+    first.save_state(path, mid)
+    assert os.path.exists(path + ".store")
+    assert os.path.exists(path + ".sim.json")
+
+    second = _cohort_runner(task, rng0)
+    restored = second.load_state(path, mid)
+    assert second.engine.rounds_done == 4
+    assert second.scheduler.clock.now == first.scheduler.clock.now
+    assert list(second.store.ids()) == list(first.store.ids())
+    s_res = second.run(restored, rounds=2, chunk_rounds=2)
+
+    _assert_states_equal(s_full.server, s_res.server)
+    ids = full.store.ids()
+    np.testing.assert_array_equal(ids, second.store.ids())
+    _assert_states_equal(full.store.gather(ids), second.store.gather(ids))
+    assert [h["t_cum"] for h in second.history.records] == \
+        [h["t_cum"] for h in full.history.records]
+    assert second.cum_bytes == full.cum_bytes
+    assert full.engine.history == second.engine.history
+
+
 def test_manual_round_override_still_wins(task):
     """`_round` stays a manual override slot (tests monkeypatch it); the
     treedef cache must not shadow it."""

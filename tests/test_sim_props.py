@@ -13,7 +13,9 @@ from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import aggregation as agg
 from repro.core.algorithms import active_indices
-from repro.sim import AsyncBufferScheduler, ClientPopulation, SyncScheduler
+from repro.sim import (AsyncBufferScheduler, ClientPopulation, SyncScheduler,
+                       cohort_available, floyd_sample)
+from repro.sim.clients import weighted_draw_ids
 
 SETTINGS = dict(deadline=None, max_examples=30,
                 suppress_health_check=[HealthCheck.too_slow])
@@ -90,6 +92,63 @@ def test_active_indices_contract(pm, extra):
     assert len(np.unique(idx)) == m                       # no collisions
     np.testing.assert_array_equal(idx[:need], np.flatnonzero(mask))
     assert not mask[idx[need:]].any()                     # padding: absent
+
+
+# ------------------------------------------------ O(m log K) cohort draws ---
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_floyd_sample_contract(K, m, seed):
+    """Floyd's O(m) draw: exactly min(m, K) ids, distinct, sorted, in
+    range, and bitwise deterministic under a fixed seed."""
+    ids = floyd_sample(np.random.default_rng(seed), K, m)
+    assert ids.shape == (min(m, K),)
+    assert len(np.unique(ids)) == ids.size
+    assert np.all(np.diff(ids) > 0) if ids.size > 1 else True
+    assert ids.min() >= 0 and ids.max() < K
+    again = floyd_sample(np.random.default_rng(seed), K, m)
+    np.testing.assert_array_equal(ids, again)
+
+
+@st.composite
+def availability_vec(draw, max_k=6):
+    K = draw(st.integers(2, max_k))
+    avail = draw(st.lists(st.floats(0.05, 1.0), min_size=K, max_size=K))
+    return np.asarray(avail)
+
+
+@given(availability_vec(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_availability_weighted_draw_frequencies_track_weights(avail, seed):
+    """The satellite pin for the fixed availability sampler: candidate
+    frequencies from the cached-CDF draw converge to the normalized
+    availability weights (the old per-round O(K) `rng.choice(p=...)`'s
+    distribution), and a fixed seed reproduces the draw bitwise."""
+    pop = ClientPopulation.uniform(avail.shape[0])
+    pop.availability = avail
+    n = 4000
+    ids = weighted_draw_ids(np.random.default_rng(seed), pop, n)
+    freq = np.bincount(ids, minlength=avail.shape[0]) / n
+    np.testing.assert_allclose(freq, avail / avail.sum(),
+                               atol=4.0 / np.sqrt(n) + 0.02)
+    np.testing.assert_array_equal(
+        ids, weighted_draw_ids(np.random.default_rng(seed), pop, n))
+
+
+@given(availability_vec(), st.floats(0.2, 1.0), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_cohort_available_contract(avail, fraction, seed):
+    """The id-form availability sampler: sorted distinct ids, never more
+    than the cohort size, never empty, and seed-deterministic."""
+    pop = ClientPopulation.uniform(avail.shape[0])
+    pop.availability = avail
+    K = avail.shape[0]
+    ids = cohort_available(np.random.default_rng(seed), pop, fraction)
+    m = min(K, max(1, int(round(fraction * K))))
+    assert 1 <= ids.size <= m
+    assert len(np.unique(ids)) == ids.size
+    assert np.all(np.diff(ids) > 0) if ids.size > 1 else True
+    np.testing.assert_array_equal(
+        ids, cohort_available(np.random.default_rng(seed), pop, fraction))
 
 
 @st.composite
