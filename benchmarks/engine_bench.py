@@ -39,6 +39,7 @@ from repro.core.protocol import DSFLConfig
 from repro.data.pipeline import SyntheticProvider, build_image_task
 from repro.kernels.era_sharpen import resolve_interpret
 from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.obs import RunProvenance
 from repro.sim import ClientPopulation, CohortRunner, SyncScheduler
 
 CHUNKS = (1, 8, 32)
@@ -217,7 +218,9 @@ def run(fast: bool = True):
     popu = bench_population_scaling(fast)
     wera = bench_weighted_era(fast)
     with open(OUT_JSON, "w") as f:
-        json.dump({"scan": scan, "participation": part,
+        # provenance header: which commit/jax/backend produced these numbers
+        json.dump({"provenance": RunProvenance.collect().asdict(),
+                   "scan": scan, "participation": part,
                    "population_scaling": popu,
                    "weighted_era": wera}, f, indent=2)
 

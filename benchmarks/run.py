@@ -25,6 +25,7 @@ BENCHES = [
     ("ttacc", "benchmarks.time_to_accuracy"),    # sim: acc vs wallclock/bytes
     ("engine", "benchmarks.engine_bench"),       # loop-vs-scan + weighted ERA
     ("serve", "benchmarks.serve_bench"),         # continuous batching + swap
+    ("obs", "benchmarks.obs_smoke"),             # traced stack + no-recompile
     ("kernels", "benchmarks.kernels_bench"),     # Pallas kernels
     ("roofline", "benchmarks.roofline_report"),  # dry-run roofline table
 ]

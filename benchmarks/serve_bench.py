@@ -39,6 +39,7 @@ from repro.core.llm_algorithms import LLMDSFLAlgorithm
 from repro.core.llm_dsfl import LLMDsflHP
 from repro.data.pipeline import build_lm_task
 from repro.models.api import model_init
+from repro.obs import RunProvenance
 from repro.serve import (AdmissionQueue, LoadSpec, Request, ServeEngine,
                          attach, run_load)
 
@@ -148,7 +149,9 @@ def run(fast: bool = True):
     grid = bench_grid(fast)
     swap = bench_swap(fast)
     with open(OUT_JSON, "w") as f:
-        json.dump({"grid": grid, "swap": swap}, f, indent=2)
+        # provenance header: which commit/jax/backend produced these numbers
+        json.dump({"provenance": RunProvenance.collect().asdict(),
+                   "grid": grid, "swap": swap}, f, indent=2)
 
     rows = []
     for key, c in grid["cells"].items():

@@ -53,6 +53,7 @@ from repro.core.engine import FedEngine, make_eval_fn
 from repro.core.protocol import DSFLConfig
 from repro.data.pipeline import (SyntheticProvider, build_image_task)
 from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.obs import cli as obs_cli
 from repro.sim import (ClientPopulation, CohortRunner, SimRunner,
                        SyncScheduler)
 
@@ -80,8 +81,13 @@ def main(argv=None):
                          "K >= 10000): O(m log K) scheduling, host-side "
                          "id-keyed client store, per-id synthetic data — "
                          "nothing O(K) in the round loop")
+    obs_cli.add_args(ap)   # --trace out.jsonl / --metrics out.json
     args = ap.parse_args(argv)
+    with obs_cli.session(args):
+        return run(args)
 
+
+def run(args):
     K = 20 if args.fast else args.clients
     rounds = 3 if args.fast else args.rounds
     fraction = (args.participation if args.fraction is None

@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from ..checkpoint import load_pytree, save_pytree
+from ..obs import trace as obs
 
 
 class ClientStore:
@@ -81,10 +82,16 @@ class ClientStore:
             n_miss = int(missing.size)
             padded = (missing if n_miss >= len(ids) else np.concatenate(
                 [missing, np.full(len(ids) - n_miss, missing[0], np.int64)]))
-            fresh = self.init_fn(padded)
-            leaves, self._treedef = jax.tree_util.tree_flatten(fresh)
-            self._insert(missing, [np.asarray(l)[:n_miss]
-                                   for l in jax.device_get(leaves)])
+            with obs.span("cohort.lazy_init", "cohort", n=n_miss):
+                fresh = self.init_fn(padded)
+                leaves, self._treedef = jax.tree_util.tree_flatten(fresh)
+                self._insert(missing, [np.asarray(l)[:n_miss]
+                                       for l in jax.device_get(leaves)])
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("cohort.gathers").inc()
+            reg.counter("cohort.lazy_inits").inc(int(missing.size))
+            reg.gauge("cohort.touched_clients").set(len(self._rows))
         treedef = self._ensure_treedef()
         stacked = [np.stack([self._rows[int(i)][j] for i in ids])
                    for j in range(treedef.num_leaves)]
@@ -99,6 +106,9 @@ class ClientStore:
         leaves = [np.asarray(l)
                   for l in jax.device_get(jax.tree_util.tree_flatten(slab)[0])]
         self._insert(ids[:n], leaves)
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("cohort.scatters").inc()
 
     # ---------------------------------------------------------- checkpoint --
     def save(self, path: str) -> None:

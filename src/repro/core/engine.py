@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import assert_tree_compatible, load_pytree, save_pytree
+from ..obs import trace as obs
 from .algorithms import BatchCtx, EMPTY, FedAlgorithm, RoundState
 # re-exported so new-API callers need only this module (the implementation
 # lives with the reference engine)
@@ -326,20 +327,26 @@ class FedEngine:
                 fn = self._get_round(state, ctx)
             elif fn is None:
                 fn = self._get_round(state, ctx)
-            state, m = fn(state, ctx, rk)
-            if self.on_round is not None:
-                state = self.on_round(r, state)
-            self.last_metrics = m
-            self.rounds_done = r + 1
-            if self.on_chunk is not None:
-                self.on_chunk(self.rounds_done, state)
-            if (r + 1) % log_every == 0:
-                rec = {"round": r + 1,
-                       **{k: float(v) for k, v in m.items()
-                          if jnp.ndim(v) == 0}}
-                if self.eval_fn is not None:
-                    rec.update(self.eval_fn(*self.algo.eval_params(state)))
-                self.history.append(rec)
+            with obs.span("engine.round", "engine", round=r):
+                state, m = fn(state, ctx, rk)
+                if self.on_round is not None:
+                    state = self.on_round(r, state)
+                self.last_metrics = m
+                self.rounds_done = r + 1
+                if self.on_chunk is not None:
+                    self.on_chunk(self.rounds_done, state)
+                if (r + 1) % log_every == 0:
+                    rec = {"round": r + 1,
+                           **{k: float(v) for k, v in m.items()
+                              if jnp.ndim(v) == 0}}
+                    if self.eval_fn is not None:
+                        with obs.span("engine.eval", "engine"):
+                            rec.update(self.eval_fn(
+                                *self.algo.eval_params(state)))
+                    self.history.append(rec)
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("engine.rounds").inc(rounds)
         return state
 
     def _effective_chunk(self, chunk_rounds: int) -> int:
@@ -354,9 +361,10 @@ class FedEngine:
     def _run_scanned(self, state, data, rounds, weights, log_every, start,
                      rng, chunk, ctx_plan, n_open, n_r, active_budget=None,
                      cohort=EMPTY, population=None) -> RoundState:
-        r, end = start, start + rounds
+        r, end, n_chunks = start, start + rounds, 0
         while r < end:
             k = min(chunk, end - r)
+            n_chunks += 1
             if self.eval_fn is not None:
                 # eval needs the state at every log point: snap the segment
                 # to end exactly on the next log boundary
@@ -368,24 +376,35 @@ class FedEngine:
                                  active_budget=active_budget, cohort=cohort,
                                  population=population)
             fn = self._get_chunk(k, n_open, n_r, state, ctx0, plan)
-            state, rng, ms = fn(state, ctx0, rng, plan)
-            self.last_metrics = {key: v[-1] for key, v in ms.items()}
-            # one host sync per chunk: the stacked per-round scalars land
-            # together instead of one float() device round-trip per round
-            scalars = jax.device_get({key: v for key, v in ms.items()
-                                      if jnp.ndim(v) == 1})
+            # the span covers dispatch through the chunk's one host sync
+            # (device_get below) — all instrumentation sits OUTSIDE the
+            # compiled scan, so the fused path stays bitwise identical and
+            # keeps its one-sync-per-chunk discipline
+            with obs.span("engine.chunk", "engine", rounds=k, start_round=r):
+                state, rng, ms = fn(state, ctx0, rng, plan)
+                self.last_metrics = {key: v[-1] for key, v in ms.items()}
+                # one host sync per chunk: the stacked per-round scalars land
+                # together instead of one float() device round-trip per round
+                scalars = jax.device_get({key: v for key, v in ms.items()
+                                          if jnp.ndim(v) == 1})
             for i in range(k):
                 if (r + i + 1) % log_every != 0:
                     continue
                 rec = {"round": r + i + 1,
                        **{key: float(v[i]) for key, v in scalars.items()}}
                 if self.eval_fn is not None:   # i == k - 1 by the snap above
-                    rec.update(self.eval_fn(*self.algo.eval_params(state)))
+                    with obs.span("engine.eval", "engine"):
+                        rec.update(self.eval_fn(
+                            *self.algo.eval_params(state)))
                 self.history.append(rec)
             r += k
             self.rounds_done = r
             if self.on_chunk is not None:
                 self.on_chunk(self.rounds_done, state)
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("engine.rounds").inc(rounds)
+            reg.counter("engine.chunks").inc(n_chunks)
         return state
 
     # -------------------------------------------------------- comm bytes ----
@@ -402,14 +421,18 @@ class FedEngine:
         the actually-encoded payload pytree via ``eval_shape`` (free).  The
         legs differ under a per-leg `wire.AsymmetricCodec` (sparse upload,
         dense broadcast); the `repro.sim` clock charges each separately."""
-        ctx = self._payload_ctx(data)
-        up = jax.eval_shape(
-            lambda s, c: self.codec.encode_up(self.algo.upload_payload(s, c)),
-            state, ctx)
-        down = jax.eval_shape(
-            lambda s, c: self.codec.encode_down(self.algo.upload_payload(s, c)),
-            state, ctx)
-        return nbytes(up), nbytes(down)
+        with obs.span("wire.measure", "wire",
+                      codec=self.codec.name) as sp:
+            ctx = self._payload_ctx(data)
+            up = jax.eval_shape(
+                lambda s, c: self.codec.encode_up(
+                    self.algo.upload_payload(s, c)), state, ctx)
+            down = jax.eval_shape(
+                lambda s, c: self.codec.encode_down(
+                    self.algo.upload_payload(s, c)), state, ctx)
+            up_b, down_b = nbytes(up), nbytes(down)
+            sp.set(up_bytes=up_b, down_bytes=down_b)
+        return up_b, down_b
 
     def measured_round_bytes(self, state: RoundState, data,
                              n_clients: Optional[int] = None) -> int:
@@ -421,6 +444,16 @@ class FedEngine:
         K = _leading_dim(data.x_clients) if n_clients is None else n_clients
         up, down = self.measured_leg_bytes(state, data)
         return up * K + down
+
+    # ----------------------------------------------------------- telemetry --
+    def compile_counts(self) -> dict:
+        """Compiled-program accounting (`obs.engine_compile_counts`): how
+        many round/chunk signatures this engine built and how many programs
+        their jits compiled — after warmup each signature should hold at
+        exactly one program (the serve-engine discipline, CI-pinned by
+        ``benchmarks/obs_smoke.py``)."""
+        from ..obs import engine_compile_counts
+        return engine_compile_counts(self)
 
     # ------------------------------------------------------- checkpointing --
     def save_state(self, path: str, state: RoundState) -> None:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config, list_archs
 from ..models.api import (model_decode_step, model_init, model_prefill)
+from ..obs import cli as obs_cli
 from ..serve import AdmissionQueue, ServeEngine
 from .train import extra_inputs
 
@@ -60,15 +61,19 @@ def serve_continuous(cfg, params, prompts, gen: int, seq_budget: int):
     engine = ServeEngine(cfg, params, slots=len(prompts),
                          seq_budget=seq_budget)
     queue = AdmissionQueue(buckets=engine.buckets)
+    # one clock for the whole request lifecycle (arrival/admission/steps),
+    # so the latency bookkeeping on Response is internally consistent
+    t0 = time.perf_counter()
     for toks in prompts:
-        queue.submit(toks, gen, now=0.0)
-    for req in queue.admit(0.0, len(engine.free_slots())):
-        engine.insert(req, 0.0)
+        queue.submit(toks, gen, now=time.perf_counter() - t0)
+    for req in queue.admit(time.perf_counter() - t0,
+                           len(engine.free_slots())):
+        engine.insert(req, time.perf_counter() - t0)
     times = []
     while engine.n_active:
-        t0 = time.perf_counter()
-        engine.step(time.perf_counter())
-        times.append(time.perf_counter() - t0)
+        ts = time.perf_counter()
+        engine.step(time.perf_counter() - t0)
+        times.append(time.perf_counter() - ts)
     by_id = {r.id: r for r in engine.pop_completed()}
     return [by_id[i] for i in sorted(by_id)], times
 
@@ -83,8 +88,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lockstep", action="store_true",
                     help="pre-subsystem whole-batch baseline path")
+    obs_cli.add_args(ap)
     args = ap.parse_args(argv)
+    with obs_cli.session(args):
+        run(args)
 
+
+def run(args):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()

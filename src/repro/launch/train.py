@@ -52,6 +52,7 @@ from ..models.api import model_init
 from ..models.base import param_count
 from ..models.shardctx import axis_ctx
 from ..checkpoint import save_pytree
+from ..obs import cli as obs_cli
 from .mesh import make_client_mesh
 
 
@@ -98,8 +99,13 @@ def main(argv=None):
                          "sim path (sync participation planned per chunk)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    obs_cli.add_args(ap)
     args = ap.parse_args(argv)
+    with obs_cli.session(args):
+        run(args)
 
+
+def run(args):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()

@@ -1,0 +1,78 @@
+"""Shared ``--trace`` / ``--metrics`` wiring for the launch drivers.
+
+Every entry point (``repro.launch.train``, ``repro.launch.serve``,
+``examples/sim_stragglers.py``) grows the same two flags through
+`add_args` and wraps its run in `session`:
+
+    obs_cli.add_args(ap)
+    args = ap.parse_args(argv)
+    with obs_cli.session(args):
+        ...  # the run — instrumented libraries publish automatically
+
+With neither flag passed the session installs nothing, so the run takes
+the zero-overhead disabled path.  With ``--trace out.jsonl`` a `Tracer`
+(provenance-stamped header) is installed for the duration; with
+``--metrics out.json`` a `MetricsRegistry` is installed and its snapshot
+(plus the same provenance stamp) is written on exit.  Convert a trace for
+the Perfetto UI with ``python -m repro.obs.perfetto out.jsonl out.json``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def add_args(ap) -> None:
+    """Install the observability flags on an argparse parser."""
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="write a structured JSONL span trace here "
+                         "(convert with python -m repro.obs.perfetto)")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="write a metrics snapshot (counters/gauges/"
+                         "histograms + provenance) here on exit")
+
+
+class session:
+    """Context manager: install tracer/registry per ``args``, tear down
+    and write outputs on exit (exception-safe — a crashed run still gets
+    its partial trace flushed)."""
+
+    def __init__(self, args):
+        self.trace_path: Optional[str] = getattr(args, "trace", None)
+        self.metrics_path: Optional[str] = getattr(args, "metrics", None)
+        self._tracer = None
+        self._registry = None
+        self._prev_tracer = None
+        self._prev_registry = None
+        self._provenance = None
+
+    def __enter__(self) -> "session":
+        from . import trace as obs
+        if self.trace_path or self.metrics_path:
+            from .provenance import RunProvenance
+            self._provenance = RunProvenance.collect().asdict()
+        if self.trace_path:
+            self._tracer = obs.Tracer(self.trace_path,
+                                      provenance=self._provenance)
+            self._prev_tracer = obs.install(self._tracer)
+            from .jit_watch import ensure_listener
+            ensure_listener()
+        if self.metrics_path:
+            from .metrics import MetricsRegistry
+            self._registry = MetricsRegistry()
+            self._prev_registry = obs.install_registry(self._registry)
+        return self
+
+    def __exit__(self, *exc):
+        from . import trace as obs
+        if self._registry is not None:
+            obs.install_registry(self._prev_registry)
+            self._registry.to_json(self.metrics_path,
+                                   provenance=self._provenance)
+            print(f"metrics snapshot: {self.metrics_path}")
+        if self._tracer is not None:
+            obs.install(self._prev_tracer)
+            self._tracer.close()
+            print(f"trace: {self.trace_path} "
+                  f"({self._tracer.n_records} records; view: python -m "
+                  f"repro.obs.perfetto {self.trace_path} out.json)")
+        return False

@@ -1,0 +1,187 @@
+"""Compile/retrace accounting: know exactly when XLA compiles something.
+
+Recompiles are this repo's quietest performance bug: an eager op fed a new
+batch shape, a ctx whose treedef flipped, a donated buffer placed wrong —
+each silently re-traces and re-compiles, and the run is suddenly 100x
+slower with bit-identical results.  `JitCacheWatch` turns that into data:
+
+* every XLA backend compile fires a `jax.monitoring` event; an active
+  watch records it (count + duration) and, when tracing is on, draws it
+  as a ``cat="jit"`` span on the timeline — so "why is round 7 slow"
+  is answered by looking;
+* ``wrap(name, fn)`` instruments a specific jitted callable: after each
+  call the cache size is polled, and growth is recorded with the call's
+  arg treedef and timestamp — *which function, which structure, when*;
+* ``mark()`` / ``assert_no_new_compiles()`` pin the steady state: CI
+  warms a path up, marks, runs the real work, and asserts the jit caches
+  never grew (`benchmarks/obs_smoke.py`).
+
+The monitoring listener is registered once per process, lazily, and
+dispatches to whichever watches are active — jax offers no per-listener
+unregistration, so the listener itself is permanent but free when
+nothing is listening.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from . import trace as _trace
+
+COMPILE_EVENT = "backend_compile"     # substring of the jax.monitoring event
+
+
+def jit_cache_size(fn) -> int:
+    """Number of programs a jitted callable has compiled (-1 if this jax
+    version hides the API).  The no-recompile-after-warmup guarantees in
+    serve and CI are asserted through this."""
+    try:
+        return fn._cache_size()
+    except Exception:  # pragma: no cover - jax without the private API
+        return -1
+
+
+def engine_compile_counts(engine) -> dict:
+    """Compiled-program accounting for a `core.engine.FedEngine`: how many
+    distinct round/chunk signatures were built and how many programs their
+    jits compiled (each treedef-keyed entry should sit at exactly 1 after
+    warmup — more means something re-specialized underneath it)."""
+    rounds = [jit_cache_size(f) for f in engine._round_cache.values()]
+    chunks = [jit_cache_size(f) for f in engine._chunk_cache.values()]
+    return {"round_signatures": len(rounds),
+            "round_programs": sum(max(n, 0) for n in rounds),
+            "chunk_signatures": len(chunks),
+            "chunk_programs": sum(max(n, 0) for n in chunks)}
+
+
+@dataclass
+class CompileRecord:
+    """One observed compilation."""
+    kind: str                         # "xla" (monitoring) | "cache" (wrap)
+    name: str                         # event name or wrapped-fn name
+    t_ns: int                         # perf_counter_ns at observation
+    duration_s: Optional[float] = None
+    treedef: Optional[str] = None     # arg treedef (wrapped fns only)
+
+
+# one process-global listener fanning out to the active watches
+_WATCHES: list = []
+_LISTENER_INSTALLED = False
+
+
+def _on_event_duration(event: str, duration: float, **kw) -> None:
+    if COMPILE_EVENT not in event:
+        return
+    t1 = time.perf_counter_ns()
+    for w in _WATCHES:
+        w._records.append(CompileRecord(kind="xla", name=event, t_ns=t1,
+                                        duration_s=duration))
+    tracer = _trace._TRACER
+    if tracer is not None:
+        # draw the compile as a block ending now (jax reports the duration
+        # only on completion)
+        tracer._write_span("xla.compile", "jit",
+                           t1 - int(duration * 1e9), t1,
+                           {"duration_ms": duration * 1e3})
+
+
+def ensure_listener() -> None:
+    """Register the monitoring listener (idempotent).  Called by watch
+    activation and by `obs.start`, so compiles land on every trace."""
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return
+    try:
+        import jax.monitoring
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_event_duration)
+        _LISTENER_INSTALLED = True
+    except Exception:  # pragma: no cover - jax without monitoring
+        pass
+
+
+@dataclass(eq=False)              # identity semantics: watches live in a list
+class JitCacheWatch:
+    """Records every compilation observed while active.
+
+    Use as a context manager (``with JitCacheWatch() as watch:``) or call
+    ``start()``/``stop()``.  ``records`` accumulates `CompileRecord`s from
+    the global XLA compile events plus any ``wrap``-instrumented
+    callables; ``mark()`` snapshots the current count so
+    ``new_since_mark()``/``assert_no_new_compiles()`` can pin a warmed-up
+    steady state."""
+    _records: list = field(default_factory=list)
+    _wrapped: dict = field(default_factory=dict)   # name -> (fn, [last_size])
+    _mark: int = 0
+
+    # ---------------------------------------------------------- lifecycle ----
+    def start(self) -> "JitCacheWatch":
+        ensure_listener()
+        if self not in _WATCHES:
+            _WATCHES.append(self)
+        return self
+
+    def stop(self) -> None:
+        if self in _WATCHES:
+            _WATCHES.remove(self)
+
+    def __enter__(self) -> "JitCacheWatch":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+    # ------------------------------------------------------------ records ----
+    @property
+    def records(self) -> list:
+        return list(self._records)
+
+    def compiles(self) -> int:
+        """Total compilations observed since the watch started."""
+        return len(self._records)
+
+    def mark(self) -> int:
+        """Declare warmup over: subsequent compiles are regressions."""
+        self._mark = len(self._records)
+        return self._mark
+
+    def new_since_mark(self) -> list:
+        return self._records[self._mark:]
+
+    def assert_no_new_compiles(self, what: str = "after warmup") -> None:
+        new = self.new_since_mark()
+        if new:
+            detail = ", ".join(
+                f"{r.name}" + (f" ({r.treedef})" if r.treedef else "")
+                for r in new[:8])
+            raise AssertionError(
+                f"{len(new)} new compile(s) {what}: {detail}"
+                + ("..." if len(new) > 8 else ""))
+
+    # ----------------------------------------------------- per-fn tracking ---
+    def wrap(self, name: str, fn):
+        """Instrument a jitted callable: after every call, cache growth is
+        recorded with the call's arg treedef — the record that answers
+        *which* function retraced and on what structure."""
+        import jax
+        state = [jit_cache_size(fn)]
+        self._wrapped[name] = (fn, state)
+
+        def wrapped(*args, **kwargs):
+            out = fn(*args, **kwargs)
+            n = jit_cache_size(fn)
+            if n > state[0]:
+                state[0] = n
+                self._records.append(CompileRecord(
+                    kind="cache", name=name, t_ns=time.perf_counter_ns(),
+                    treedef=str(jax.tree_util.tree_structure((args, kwargs)))))
+            return out
+
+        return wrapped
+
+    def cache_sizes(self) -> dict:
+        """Current per-wrapped-fn compiled-program counts."""
+        return {name: jit_cache_size(fn)
+                for name, (fn, _) in self._wrapped.items()}

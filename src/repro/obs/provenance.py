@@ -1,0 +1,87 @@
+"""`RunProvenance` — the who/where/how stamp on every measurement.
+
+The ROADMAP's measurement-discipline lesson (the 4012µs-vs-323µs
+interpret-vs-compiled comparison that turned out to be meaningless) is
+that a number without its environment is noise.  `collect()` gathers the
+facts that change what a number means — git sha (and whether the tree was
+dirty), jax/jaxlib versions, backend/platform, device count, x64 mode,
+and whether the Pallas kernels run interpreted — and every trace header,
+metrics snapshot, and ``BENCH_*.json`` carries the result.
+
+Collection is defensive: a missing git binary, a non-repo checkout, or an
+import failure degrades the field to None instead of failing the run the
+stamp was meant to describe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import platform as _platform
+import subprocess
+import sys
+from dataclasses import dataclass
+from typing import Optional
+
+
+def _git(args: list, cwd: str) -> Optional[str]:
+    try:
+        out = subprocess.run(["git", *args], cwd=cwd, capture_output=True,
+                             text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+@dataclass(frozen=True)
+class RunProvenance:
+    git_sha: Optional[str] = None
+    git_dirty: Optional[bool] = None
+    jax_version: Optional[str] = None
+    jaxlib_version: Optional[str] = None
+    backend: Optional[str] = None
+    n_devices: Optional[int] = None
+    platform: Optional[str] = None
+    python: Optional[str] = None
+    x64: Optional[bool] = None
+    kernel_interpret: Optional[bool] = None
+    argv: Optional[str] = None
+
+    @classmethod
+    def collect(cls) -> "RunProvenance":
+        repo = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))   # src/repro/obs/..
+        sha = _git(["rev-parse", "HEAD"], repo)
+        dirty = None
+        if sha is not None:
+            status = _git(["status", "--porcelain"], repo)
+            dirty = bool(status) if status is not None else None
+        jax_version = jaxlib_version = backend = None
+        n_devices = x64 = None
+        try:
+            import jax
+            import jaxlib
+            jax_version = jax.__version__
+            jaxlib_version = jaxlib.__version__
+            # default_backend initializes the backend; by stamp time every
+            # caller has long since paid that cost
+            backend = jax.default_backend()
+            n_devices = jax.device_count()
+            x64 = bool(jax.config.read("jax_enable_x64"))
+        except Exception:  # pragma: no cover - jax always importable here
+            pass
+        interpret = None
+        try:
+            from ..kernels.era_sharpen import resolve_interpret
+            interpret = bool(resolve_interpret(None))
+        except Exception:  # pragma: no cover - kernels unavailable
+            pass
+        return cls(git_sha=sha, git_dirty=dirty, jax_version=jax_version,
+                   jaxlib_version=jaxlib_version, backend=backend,
+                   n_devices=n_devices,
+                   platform=_platform.platform(),
+                   python=_platform.python_version(),
+                   x64=x64, kernel_interpret=interpret,
+                   argv=" ".join(sys.argv))
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)

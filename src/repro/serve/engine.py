@@ -42,19 +42,11 @@ import numpy as np
 from ..checkpoint import assert_tree_compatible
 from ..models.api import model_decode_step, model_init_cache, model_prefill
 from ..models.base import ModelConfig
+from ..obs import trace as obs
+from ..obs.jit_watch import jit_cache_size  # canonical impl; re-exported
 from .queue import Request, Response, bucket_of
 
 DEFAULT_BUCKETS = (16, 32, 64, 128)
-
-
-def jit_cache_size(fn) -> int:
-    """Number of programs a jitted callable has compiled (-1 if the jax
-    version hides it).  The no-recompile-after-warmup guarantee is asserted
-    through this."""
-    try:
-        return fn._cache_size()
-    except Exception:  # pragma: no cover - older/newer jax without the API
-        return -1
 
 
 @dataclass
@@ -194,9 +186,14 @@ class ServeEngine:
         fn = self._prefill_fns.get(n)
         if fn is None:
             fn = self._prefill_fns[n] = self._build_prefill(n)
-        toks = jnp.asarray(np.asarray(req.tokens[:n], np.int32)[None])
-        first, self.cache = fn(self.params, self.cache, toks, slot)
+        with obs.span("serve.prefill", "serve", req=req.id, bucket=n,
+                      slot=slot):
+            toks = jnp.asarray(np.asarray(req.tokens[:n], np.int32)[None])
+            first, self.cache = fn(self.params, self.cache, toks, slot)
         self.n_inserts += 1
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("serve.inserts").inc()
 
         task = _SlotTask(req=req, pending=list(req.tokens[n:]),
                          admitted_at=float(now))
@@ -217,10 +214,15 @@ class ServeEngine:
         nothing reads).  Returns the requests that finished this step."""
         if self.n_active == 0:
             return []
-        nxt, self.cache = self._step_fn(self.params, self.cache,
-                                        self.tok, self.pos)
-        nxt = np.asarray(nxt)           # the per-step host sync: (N,) tokens
+        with obs.span("serve.decode", "serve", active=self.n_active):
+            nxt, self.cache = self._step_fn(self.params, self.cache,
+                                            self.tok, self.pos)
+            nxt = np.asarray(nxt)       # the per-step host sync: (N,) tokens
         self.n_steps += 1
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("serve.decode_steps").inc()
+            reg.gauge("serve.active_slots").set(self.n_active)
         done_before = len(self.completed)
         for i, task in enumerate(self.tasks):
             if task is None:
@@ -240,6 +242,12 @@ class ServeEngine:
         task = self.tasks[slot]
         if task.first_token_at is None:
             task.first_token_at = float(now)
+            reg = obs.current_registry()
+            if reg is not None:
+                # admit -> first token, in the caller's clock (virtual or
+                # wall) — the serving-latency histogram the bench reports
+                reg.histogram("serve.admit_to_first_token_s").observe(
+                    task.first_token_at - task.admitted_at)
         task.generated.append(token)
         done = (len(task.generated) >= task.req.max_new_tokens
                 or (self.eos_id is not None and token == self.eos_id))
@@ -270,10 +278,16 @@ class ServeEngine:
                 lambda old, new: jax.tree.map(
                     lambda o, n: n.astype(o.dtype), old, new),
                 donate_argnums=(0,))
-        self.params = self._swap_fn(self.params, new_params)
+        with obs.span("serve.swap", "swap",
+                      version=version if version is not None
+                      else self.version + 1):
+            self.params = self._swap_fn(self.params, new_params)
         self.version = int(version) if version is not None \
             else self.version + 1
         self.n_swaps += 1
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.counter("serve.swaps").inc()
 
     # ----------------------------------------------------------- telemetry ---
     def compile_counts(self) -> dict:

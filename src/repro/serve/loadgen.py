@@ -15,10 +15,11 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
+from ..obs.metrics import percentile, percentiles
 from .engine import ServeEngine
 from .queue import AdmissionQueue
 
@@ -92,30 +93,36 @@ def run_load(engine: ServeEngine, queue: AdmissionQueue, spec: LoadSpec, *,
                      queue=queue, engine=engine)
 
 
-def _pct(xs: Sequence[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else -1.0
-
-
 def summarize(responses, *, makespan: float, wall_s: float,
               queue: Optional[AdmissionQueue] = None,
               engine: Optional[ServeEngine] = None) -> dict:
-    """p50/p99 latency + time-to-first-token (virtual seconds), throughput
-    (generated tokens per virtual second, and per wall second), and exact
-    shed accounting."""
+    """p50/p90/p99 latency + time-to-first-token (virtual seconds),
+    throughput (generated tokens per virtual second, and per wall second),
+    and exact shed accounting.  Percentiles all come from the one shared
+    implementation in `repro.obs.metrics`; shed requests' queue-wait time
+    is accounted (``queue_wait_*`` spans served *and* shed responses, and
+    ``shed_wait_*`` reports how long dropped requests sat before being
+    shed) rather than silently vanishing from the latency picture."""
     done = [r for r in responses if not r.shed]
     shed = [r for r in responses if r.shed]
     n_tokens = sum(len(r.tokens) for r in done)
+
+    def pcts(prefix, xs):
+        return {f"{prefix}_{k}_s": v for k, v in percentiles(xs).items()}
+
     out = {
         "completed": len(done),
         "shed": len(shed),
         "tokens": n_tokens,
         "makespan_virtual_s": makespan,
         "wall_s": wall_s,
-        "latency_p50_s": _pct([r.latency for r in done], 50),
-        "latency_p99_s": _pct([r.latency for r in done], 99),
-        "ttft_p50_s": _pct([r.ttft for r in done], 50),
-        "ttft_p99_s": _pct([r.ttft for r in done], 99),
-        "queue_delay_p50_s": _pct([r.queue_delay for r in done], 50),
+        **pcts("latency", [r.latency for r in done]),
+        **pcts("ttft", [r.ttft for r in done]),
+        "queue_delay_p50_s": percentile([r.queue_delay for r in done], 50),
+        # every submitted request's time-in-queue, shed included — the
+        # number that shows overload instead of hiding it in the shed bin
+        **pcts("queue_wait", [r.queue_wait for r in responses]),
+        **pcts("shed_wait", [r.queue_wait for r in shed]),
         "throughput_tok_per_virtual_s":
             n_tokens / makespan if makespan > 0 else 0.0,
         "throughput_tok_per_wall_s":

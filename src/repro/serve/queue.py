@@ -20,6 +20,8 @@ from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence
 
+from ..obs import trace as obs
+
 
 @dataclass(frozen=True)
 class Request:
@@ -60,6 +62,15 @@ class Response:
     @property
     def queue_delay(self) -> float:
         return self.admitted_at - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        """Time spent in the admission queue — admission for served
+        requests, the shed moment for shed ones.  Unlike ``queue_delay``
+        this is well-defined for every response, so shed requests' waiting
+        time lands in the latency accounting instead of vanishing."""
+        end = self.finished_at if self.shed else self.admitted_at
+        return end - self.arrival
 
     @property
     def ttft(self) -> float:
@@ -111,9 +122,12 @@ class AdmissionQueue:
         self.n_submitted += 1
         if self.max_queue is not None and len(self) >= self.max_queue:
             self.shed.append(self._shed_response(req, now))
+            self._publish(shed=1)
+            obs.instant("queue.shed", "queue", req=req.id, reason="backlog")
             return req
         b = bucket_of(req.prompt_len, self.buckets)
         self._q.setdefault(b, deque()).append(req)
+        self._publish()
         return req
 
     # ---------------------------------------------------------- admission ----
@@ -129,6 +143,12 @@ class AdmissionQueue:
                 break
             self.n_admitted += 1
             out.append(req)
+        if out:
+            self._publish()
+            reg = obs.current_registry()
+            if reg is not None:
+                for req in out:
+                    reg.histogram("queue.wait_s").observe(now - req.arrival)
         return out
 
     def shed_expired(self, now: float) -> list:
@@ -146,6 +166,11 @@ class AdmissionQueue:
                     keep.append(req)
             self._q[b] = keep
         self.shed.extend(dropped)
+        if dropped:
+            self._publish(shed=len(dropped))
+            for r in dropped:
+                obs.instant("queue.shed", "queue", req=r.id,
+                            waited_s=r.queue_wait)
         return dropped
 
     def _pop_oldest(self) -> Optional[Request]:
@@ -157,8 +182,18 @@ class AdmissionQueue:
 
     @staticmethod
     def _shed_response(req: Request, now: float) -> Response:
+        # finished_at is the shed moment, so latency/queue_wait cover the
+        # full time the request sat in the queue before being dropped
         return Response(id=req.id, prompt_len=req.prompt_len, tokens=(),
                         arrival=req.arrival, finished_at=float(now), shed=True)
+
+    def _publish(self, shed: int = 0) -> None:
+        reg = obs.current_registry()
+        if reg is None:
+            return
+        reg.gauge("queue.depth").set(len(self))
+        if shed:
+            reg.counter("queue.shed").inc(shed)
 
     # ------------------------------------------------------------- state -----
     def __len__(self) -> int:

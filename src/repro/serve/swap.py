@@ -32,6 +32,7 @@ from typing import Optional
 import jax
 
 from ..checkpoint import load_pytree
+from ..obs import trace as obs
 from .engine import ServeEngine
 
 
@@ -51,11 +52,17 @@ class WeightSync:
     def __call__(self, rounds_done: int, state) -> None:
         if rounds_done % max(1, int(self.every)) != 0:
             return
-        params, _ = self.algo.eval_params(state)
-        t0 = time.perf_counter()
-        self.serve.swap_weights(params, version=rounds_done)
-        jax.block_until_ready(self.serve.params)
-        self.swap_log.append((int(rounds_done), time.perf_counter() - t0))
+        with obs.span("swap.sync", "swap", round=rounds_done) as sp:
+            params, _ = self.algo.eval_params(state)
+            t0 = time.perf_counter()
+            self.serve.swap_weights(params, version=rounds_done)
+            jax.block_until_ready(self.serve.params)
+            dt = time.perf_counter() - t0
+            sp.set(swap_s=dt)
+        self.swap_log.append((int(rounds_done), dt))
+        reg = obs.current_registry()
+        if reg is not None:
+            reg.histogram("swap.latency_s").observe(dt)
 
     @property
     def last_swap_s(self) -> Optional[float]:

@@ -30,8 +30,22 @@ import numpy as np
 from ..core.algorithms import ClientState, EMPTY, RoundState
 from ..core.cohort import ClientStore, build_slab, slab_ctx_plan
 from ..core.engine import FedEngine
+from ..obs import trace as obs
 from .history import SimHistory
 from .scheduler import RoundPlan
+
+
+def _publish_chunk(runner, plans, up_bytes: float, down_bytes: float) -> None:
+    """Per-chunk metrics both runners share: the wire-byte ledger and the
+    participation the schedule actually delivered."""
+    reg = obs.current_registry()
+    if reg is None:
+        return
+    n_part = sum(p.n_participants for p in plans)
+    reg.counter("sim.up_bytes").inc(int(up_bytes) * n_part)
+    reg.counter("sim.down_bytes").inc(int(down_bytes) * len(plans))
+    reg.counter("sim.participant_rounds").inc(n_part)
+    reg.gauge("sim.cum_bytes").set(runner.cum_bytes)
 
 
 @dataclass
@@ -123,9 +137,10 @@ class SimRunner:
             while done < rounds:
                 k = min(chunk_rounds, rounds - done) if fused else 1
                 r0 = eng.rounds_done
-                plans = [self.scheduler.next_round(
-                    np.random.default_rng([self.seed, r0 + i]),
-                    up_bytes, down_bytes) for i in range(k)]
+                with obs.span("sim.plan", "sim", rounds=k, start_round=r0):
+                    plans = [self.scheduler.next_round(
+                        np.random.default_rng([self.seed, r0 + i]),
+                        up_bytes, down_bytes) for i in range(k)]
                 n_hist = len(eng.history)
                 budget = (None if self.scheduler.idealized
                           else self._budget(active_budget, plans))
@@ -167,6 +182,7 @@ class SimRunner:
                         rec.update({k2: v for k2, v in eng_rec.items()
                                     if k2 not in rec})
                     self.history.append(rec)
+                _publish_chunk(self, plans, up_bytes, down_bytes)
                 done += k
         finally:
             eng.on_ctx = prev_hook
@@ -262,14 +278,16 @@ class CohortRunner:
         while done < rounds:
             k = min(chunk_rounds, rounds - done)
             r0 = eng.rounds_done
-            plans = [sched.next_cohort(
-                np.random.default_rng([self.seed, r0 + i]),
-                up_bytes, down_bytes) for i in range(k)]
-            S = min(K, k * budget)
-            slab_ids, n_real = build_slab([p.ids for p in plans], S)
-            plan_np = slab_ctx_plan(plans, slab_ids, n_real)
-            clients = (self.store.gather(slab_ids) if self.store is not None
-                       else state.clients)
+            with obs.span("sim.plan", "sim", rounds=k, start_round=r0):
+                plans = [sched.next_cohort(
+                    np.random.default_rng([self.seed, r0 + i]),
+                    up_bytes, down_bytes) for i in range(k)]
+                S = min(K, k * budget)
+                slab_ids, n_real = build_slab([p.ids for p in plans], S)
+                plan_np = slab_ctx_plan(plans, slab_ids, n_real)
+            with obs.span("cohort.gather", "cohort", slab=S, real=n_real):
+                clients = (self.store.gather(slab_ids)
+                           if self.store is not None else state.clients)
             sstate = dataclasses.replace(state, clients=clients)
             self.peak_slab_bytes = max(self.peak_slab_bytes, sum(
                 np.asarray(l).nbytes
@@ -283,7 +301,8 @@ class CohortRunner:
                 active_budget=(budget if budget < S else None),
                 cohort=jnp.asarray(slab_ids), population=K)
             if self.store is not None:
-                self.store.scatter(slab_ids, sstate.clients, n_real)
+                with obs.span("cohort.scatter", "cohort", real=n_real):
+                    self.store.scatter(slab_ids, sstate.clients, n_real)
             state = dataclasses.replace(sstate, clients=state.clients)
             eng_recs = {rec["round"]: rec for rec in eng.history[n_hist:]}
             for i, plan in enumerate(plans):
@@ -304,6 +323,12 @@ class CohortRunner:
                     rec.update({k2: v for k2, v in eng_rec.items()
                                 if k2 not in rec})
                 self.history.append(rec)
+            _publish_chunk(self, plans, up_bytes, down_bytes)
+            reg = obs.current_registry()
+            if reg is not None:
+                reg.gauge("cohort.resident_bytes").set(self.resident_bytes())
+                reg.gauge("cohort.peak_slab_bytes").set(self.peak_slab_bytes)
+                reg.histogram("cohort.slab_real").observe(float(n_real))
             done += k
         return state
 

@@ -26,8 +26,23 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import trace as obs
 from .clients import COHORT_SAMPLERS, SAMPLERS, ClientPopulation
 from .clock import VirtualClock
+
+
+def _publish_plan(n_participants: int, n_dropped: int, t_end: float) -> None:
+    """Scheduler-side metrics: cohort sizes, straggler drops, and the
+    virtual clock, published into the installed registry (no-op without
+    one — a single global read per planned round)."""
+    reg = obs.current_registry()
+    if reg is not None:
+        reg.counter("sched.rounds_planned").inc()
+        reg.counter("sched.dropped").inc(n_dropped)
+        reg.histogram("sched.participants",
+                      bounds=tuple(float(2 ** i)
+                                   for i in range(21))).observe(n_participants)
+        reg.gauge("sched.virtual_time_s").set(t_end)
 
 
 @dataclass(frozen=True)
@@ -158,6 +173,8 @@ class SyncScheduler:
             # it joins the next aggregation at staleness >= 1
             self._pending_since[timing.dropped] = self._round
         self._round += 1
+        _publish_plan(int(mask.sum()), int(timing.dropped.sum()),
+                      self.clock.now)
         return RoundPlan(mask, staleness, t0, self.clock.now, timing.dropped)
 
     def next_cohort(self, rng: np.random.Generator, up_bytes: float,
@@ -190,6 +207,7 @@ class SyncScheduler:
             for i in dropped:
                 self._pending[int(i)] = self._round
         self._round += 1
+        _publish_plan(int(ids.size), int(dropped.size), self.clock.now)
         return CohortPlan(ids, staleness, t0, self.clock.now, dropped)
 
     # ---------------------------------------------------------- checkpoint --
@@ -272,6 +290,7 @@ class AsyncBufferScheduler:
         self._arrival[idx] = (self.clock.now
                               + self._latency(rng, up_bytes, down_bytes)[idx])
         self._round += 1
+        _publish_plan(int(mask.sum()), 0, self.clock.now)
         return RoundPlan(mask, staleness, t0, self.clock.now,
                          np.zeros(K, bool))
 
@@ -302,6 +321,7 @@ class AsyncBufferScheduler:
         for i, t in zip(ids, lat):
             heapq.heappush(self._heap, (self.clock.now + float(t), int(i)))
         self._round += 1
+        _publish_plan(int(ids.size), 0, self.clock.now)
         return CohortPlan(ids, staleness, t0, self.clock.now,
                           np.zeros(0, np.int64))
 

@@ -1,0 +1,388 @@
+"""`repro.obs` pins: zero-overhead-when-disabled parity, trace schema,
+metrics invariants, compile accounting.
+
+The load-bearing tests are the **parity** ones: an instrumented run
+(tracer + metrics registry installed) must be *bitwise identical* to the
+uninstrumented run on every path that carries instrumentation — the
+engine's per-round loop, the fused ``chunk_rounds`` scan, and the
+cohort-resident runner.  Instrumentation is host-side only (spans around
+compiled calls, never inside them), so any divergence means a span leaked
+into traced code.  The rest pins the trace JSONL schema + Perfetto export,
+the histogram/percentile invariants (hypothesis where available, seeded
+sweep always), and `JitCacheWatch` catching an injected recompile."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import DSFLAlgorithm
+from repro.core.cohort import ClientStore
+from repro.core.engine import FedEngine
+from repro.core.protocol import DSFLConfig
+from repro.data.pipeline import SyntheticProvider, build_image_task
+from repro.models.smallnets import apply_tiny_mlp, init_tiny_mlp
+from repro.obs import (Histogram, JitCacheWatch, MetricsRegistry,
+                       RunProvenance, Tracer, engine_compile_counts,
+                       install_registry, percentile, percentiles, span,
+                       trace_to)
+from repro.obs import trace as obs_trace
+from repro.obs.jit_watch import jit_cache_size
+from repro.obs.perfetto import read_trace, to_perfetto, validate
+from repro.sim import ClientPopulation, CohortRunner, SyncScheduler
+
+K = 6
+HP = DSFLConfig(rounds=4, local_epochs=1, distill_epochs=1, batch_size=20,
+                open_batch=40, aggregation="era")
+
+
+@pytest.fixture(scope="module")
+def task():
+    return build_image_task(seed=0, K=K, n_private=240, n_open=80, n_test=40,
+                            distribution="non_iid")
+
+
+def _leaves(state):
+    return [np.asarray(l) for l in jax.tree.leaves(state)]
+
+
+def _assert_bitwise(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.fixture
+def instrumented(tmp_path):
+    """Install a tracer + registry for the duration of a test; yields the
+    trace path.  Restores the disabled state afterwards."""
+    path = str(tmp_path / "run.jsonl")
+    with trace_to(path):
+        prev = install_registry(MetricsRegistry())
+        try:
+            yield path
+        finally:
+            install_registry(prev)
+
+
+# ------------------------------------------------------------------ parity ---
+def test_engine_loop_bitwise_identical_under_tracing(task, tmp_path):
+    """Per-round loop path: tracing + metrics publishing change nothing."""
+    eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    plain = eng.run(eng.init(init_tiny_mlp, task), task, rounds=4)
+    plain_hist = list(eng.history)
+
+    eng2 = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    with trace_to(str(tmp_path / "t.jsonl")):
+        prev = install_registry(MetricsRegistry())
+        try:
+            traced = eng2.run(eng2.init(init_tiny_mlp, task), task, rounds=4)
+        finally:
+            install_registry(prev)
+    _assert_bitwise(plain, traced)
+    assert list(eng2.history) == plain_hist
+
+
+def test_engine_scan_bitwise_identical_under_tracing(task, tmp_path):
+    """Fused ``chunk_rounds`` scan path: the span sits outside the compiled
+    scan, so the chunk is the same program producing the same bits."""
+    eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    plain = eng.run(eng.init(init_tiny_mlp, task), task, rounds=4,
+                    chunk_rounds=2, log_every=2)
+
+    eng2 = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    with trace_to(str(tmp_path / "t.jsonl")):
+        prev = install_registry(MetricsRegistry())
+        try:
+            traced = eng2.run(eng2.init(init_tiny_mlp, task), task, rounds=4,
+                              chunk_rounds=2, log_every=2)
+        finally:
+            install_registry(prev)
+    _assert_bitwise(plain, traced)
+
+
+def _cohort_run(seed_trace=None):
+    hp = DSFLConfig(rounds=4, local_epochs=1, distill_epochs=1,
+                    batch_size=10, open_batch=40, aggregation="era")
+    algo = DSFLAlgorithm(apply_tiny_mlp, hp)
+    eng = FedEngine(algo)
+    prov = SyntheticProvider(seed=0, n_clients=K, n_per_client=10, n_open=40)
+    sched = SyncScheduler(ClientPopulation.lognormal(0, K), fraction=0.5)
+    rng0 = jax.random.PRNGKey(hp.seed)
+    store = ClientStore(lambda ids: algo.init_cohort(rng0, init_tiny_mlp,
+                                                     ids, K))
+    runner = CohortRunner(engine=eng, scheduler=sched, provider=prov,
+                          store=store, seed=0)
+    state = runner.run(algo.init_server(rng0, init_tiny_mlp), rounds=4,
+                       chunk_rounds=2)
+    return state, store, list(runner.history)
+
+
+def test_cohort_runner_bitwise_identical_under_tracing(tmp_path):
+    """CohortRunner (plan/gather/scatter spans + store counters): same
+    bits, same stored client rows, same history."""
+    plain, store_p, hist_p = _cohort_run()
+    with trace_to(str(tmp_path / "t.jsonl")):
+        prev = install_registry(MetricsRegistry())
+        try:
+            traced, store_t, hist_t = _cohort_run()
+        finally:
+            install_registry(prev)
+    _assert_bitwise(plain, traced)
+    _assert_bitwise(store_p.gather(store_p.ids()),
+                    store_t.gather(store_t.ids()))
+    assert hist_p == hist_t
+
+
+def test_disabled_path_is_shared_null_span():
+    """The zero-overhead contract: with no tracer installed, ``span``
+    returns one shared no-op object — no allocation, no timestamps."""
+    assert obs_trace._TRACER is None, "a test leaked an installed tracer"
+    s1, s2 = span("a", "engine", x=1), span("b")
+    assert s1 is s2 is obs_trace._NULL_SPAN
+    with s1 as s:
+        s.set(anything=True)            # no-op, chainable
+
+
+# ------------------------------------------------------------------ tracer ---
+def test_tracer_schema_nesting_and_validation(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tracer = Tracer(path, provenance={"jax_version": jax.__version__})
+    with tracer.span("outer", "app", depth=0):
+        with tracer.span("inner", "engine"):
+            pass
+        tracer.instant("tick", "app", n=1)
+    tracer.close()
+
+    meta, records = read_trace(path)
+    assert meta["clock"] == "perf_counter_ns"
+    assert meta["provenance"]["jax_version"] == jax.__version__
+    spans = [r for _, r in records if r["type"] == "span"]
+    by_name = {r["name"]: r for r in spans}
+    # inner closes (and is written) first; outer contains it in time
+    assert [r["name"] for r in spans] == ["inner", "outer"]
+    o, i = by_name["outer"], by_name["inner"]
+    assert o["ts_us"] <= i["ts_us"]
+    assert o["ts_us"] + o["dur_us"] >= i["ts_us"] + i["dur_us"]
+    assert o["args"] == {"depth": 0}
+
+    summary = validate(path, require_layers=("engine", "app"))
+    assert summary["spans"] == 2 and summary["instants"] == 1
+
+
+def test_trace_to_restores_previous_tracer(tmp_path):
+    assert obs_trace._TRACER is None
+    with trace_to(str(tmp_path / "a.jsonl")) as outer:
+        assert obs_trace._TRACER is outer
+        with trace_to(str(tmp_path / "b.jsonl")) as inner:
+            assert obs_trace._TRACER is inner
+        assert obs_trace._TRACER is outer
+    assert obs_trace._TRACER is None
+
+
+def test_span_set_attaches_args(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    with trace_to(path):
+        with span("measured", "wire") as sp:
+            sp.set(up_bytes=10, down_bytes=20)
+    _, records = read_trace(path)
+    (rec,) = [r for _, r in records if r["type"] == "span"]
+    assert rec["args"] == {"up_bytes": 10, "down_bytes": 20}
+
+
+def test_perfetto_export_structure(tmp_path):
+    src, dst = str(tmp_path / "t.jsonl"), str(tmp_path / "t.json")
+    with trace_to(src):
+        with span("work", "engine", r=1):
+            pass
+        obs_trace.instant("mark", "app")
+    n = to_perfetto(src, dst)
+    with open(dst) as f:
+        out = json.load(f)
+    evs = out["traceEvents"]
+    assert n == len(evs)
+    phs = {e["ph"] for e in evs}
+    assert "X" in phs and "i" in phs and "M" in phs
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["name"] == "work" and x["cat"] == "engine" and x["dur"] >= 0
+    assert "provenance" in out["otherData"]
+
+
+def test_validate_rejects_malformed_trace(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"type": "meta", "clock": "perf_counter_ns", '
+                   '"t0_ns": 0, "provenance": {"jax_version": "x"}}\n'
+                   '{"type": "span", "name": "no-timestamps"}\n')
+    with pytest.raises(ValueError):
+        validate(str(bad))
+
+
+# ----------------------------------------------------------------- metrics ---
+def test_counter_gauge_histogram_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(4)
+    reg.gauge("g").set(2.5)
+    for v in (0.001, 0.01, 0.01, 0.1):
+        reg.histogram("h").observe(v)
+    snap = reg.snapshot()
+    assert snap["c"] == 5
+    assert snap["g"] == 2.5
+    h = snap["h"]
+    assert h["count"] == 4 and h["min"] == 0.001 and h["max"] == 0.1
+    assert h["p50"] <= h["p90"] <= h["p99"]
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_registry_to_json_with_provenance(tmp_path):
+    path = str(tmp_path / "m.json")
+    reg = MetricsRegistry()
+    reg.counter("rounds").inc(3)
+    reg.to_json(path, provenance={"git_sha": "abc"})
+    with open(path) as f:
+        out = json.load(f)
+    assert out["provenance"] == {"git_sha": "abc"}
+    assert out["metrics"]["rounds"] == 3
+
+
+def test_exact_percentiles_are_the_one_implementation():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 50) == 3.0
+    assert percentile([], 50) == -1.0
+    ps = percentiles(xs)
+    assert set(ps) == {"p50", "p90", "p99"}
+    assert ps["p50"] <= ps["p90"] <= ps["p99"]
+
+
+def _check_histogram_invariants(xs):
+    h = Histogram()
+    for v in xs:
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == len(xs)
+    assert snap["min"] == min(xs) and snap["max"] == max(xs)
+    # bucket counts (plus overflow) partition the observations exactly
+    assert sum(h.counts) + h.overflow == len(xs)
+    qs = [h.percentile(q) for q in (1, 25, 50, 75, 90, 99)]
+    for a, b in zip(qs, qs[1:]):        # monotone in q
+        assert a <= b + 1e-12
+    for v in qs:                        # estimates clamped to observed range
+        assert min(xs) <= v <= max(xs)
+
+
+def test_histogram_invariants_seeded_sweep():
+    """Always-on version of the hypothesis property below (this container
+    has no hypothesis): random magnitudes across the full bucket range,
+    including out-of-range values, single observations, and ties."""
+    rng = np.random.default_rng(0)
+    for trial in range(50):
+        n = int(rng.integers(1, 40))
+        mags = rng.uniform(-8, 8, size=n)     # spans below/above the buckets
+        xs = list(10.0 ** mags)
+        if trial % 3 == 0:
+            xs[: n // 2] = [xs[0]] * (n // 2)   # ties
+        _check_histogram_invariants(xs)
+
+
+def test_histogram_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    @given(st.lists(st.floats(min_value=1e-9, max_value=1e9,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=1, max_size=60))
+    @settings(deadline=None, max_examples=60,
+              suppress_health_check=[HealthCheck.too_slow])
+    def prop(xs):
+        _check_histogram_invariants(xs)
+
+    prop()
+
+
+# --------------------------------------------------------------- jit_watch ---
+def test_jit_cache_watch_catches_injected_recompile():
+    """The regression pin: a wrapped jitted fn fed a *new input structure*
+    is recorded (which fn, which treedef) and fails the no-new-compiles
+    assertion; same-structure calls after mark() stay silent."""
+    with JitCacheWatch() as watch:
+        f = watch.wrap("f", jax.jit(lambda x: x * 2))
+        f(jnp.ones(3))                   # first compile (during warmup)
+        watch.mark()
+        f(jnp.ones(3))                   # cache hit: still clean
+        watch.assert_no_new_compiles()
+
+        f(jnp.ones(5))                   # injected recompile: new shape
+        new = watch.new_since_mark()
+        assert any(r.kind == "cache" and r.name == "f" for r in new)
+        with pytest.raises(AssertionError, match="f"):
+            watch.assert_no_new_compiles()
+
+
+def test_jit_watch_monitoring_sees_fresh_compile():
+    """The jax.monitoring listener path: compiling a brand-new program
+    fires an XLA compile event into every active watch."""
+    with JitCacheWatch() as watch:
+        salt = np.random.default_rng().integers(1 << 30)
+        g = jax.jit(lambda x: x + float(salt))
+        g(jnp.ones(2)).block_until_ready()
+        assert watch.compiles() >= 1
+        assert any(r.kind == "xla" for r in watch.records)
+
+
+def test_engine_compile_counts_shape(task):
+    eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    eng.run(eng.init(init_tiny_mlp, task), task, rounds=1)
+    counts = engine_compile_counts(eng)
+    assert counts == eng.compile_counts()
+    assert counts["round_signatures"] == 1
+    assert counts["round_programs"] >= 1
+
+
+def test_jit_cache_size_counts_programs():
+    f = jax.jit(lambda x: x + 1)
+    n0 = jit_cache_size(f)
+    if n0 < 0:
+        pytest.skip("jax without _cache_size")
+    f(jnp.ones(2))
+    f(jnp.ones(4))
+    assert jit_cache_size(f) == n0 + 2
+
+
+# -------------------------------------------------------------- provenance ---
+def test_provenance_collects_this_environment():
+    prov = RunProvenance.collect()
+    assert prov.jax_version == jax.__version__
+    assert prov.backend == jax.default_backend()
+    assert isinstance(prov.x64, bool)
+    d = prov.asdict()
+    assert d["jax_version"] == jax.__version__
+    # stamped into every trace header
+    assert set(d) >= {"git_sha", "git_dirty", "jaxlib_version", "platform",
+                      "python", "kernel_interpret", "n_devices"}
+
+
+# ------------------------------------------------- instrumented serve smoke ---
+def test_queue_shed_wait_is_accounted(instrumented):
+    """Satellite pin: a shed request's queue-wait lands in the latency
+    accounting (Response.queue_wait) and in the metrics, not dropped."""
+    from repro.serve import AdmissionQueue
+    from repro.serve.loadgen import summarize
+    q = AdmissionQueue(buckets=(4,), timeout=1.0)
+    q.submit((1, 2, 3, 4), 4, now=0.0)
+    q.submit((1, 2, 3, 4), 4, now=0.5)
+    dropped = q.shed_expired(now=2.0)    # both overstayed the 1s timeout
+    assert [r.queue_wait for r in dropped] == [2.0, 1.5]
+    rep = summarize(q.shed, makespan=2.0, wall_s=0.1)
+    assert rep["shed"] == 2
+    assert rep["shed_wait_p50_s"] == pytest.approx(1.75)
+    assert rep["queue_wait_p99_s"] >= rep["queue_wait_p50_s"] > 0
+    reg = obs_trace.current_registry()
+    assert reg.snapshot()["queue.shed"] == 2
