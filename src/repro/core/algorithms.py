@@ -367,21 +367,37 @@ class DSFLAlgorithm:
         return pw, global_logit, sa_entropy
 
     def round(self, state: RoundState, ctx: BatchCtx, rng):
-        hp = self.hp
-        spec_u, spec_d = self._specs()
+        # the fused round IS the composition of its pipeline halves — the
+        # same ops in the same order, split at the upload boundary — so the
+        # engine's `overlap=True` scan (which issues `round_start` one body
+        # early) is bitwise the sequential round by construction
+        return self.round_finish(state, ctx,
+                                 self.round_start(state, ctx, rng), rng)
+
+    def _is_sparse(self, ctx: BatchCtx) -> bool:
+        """Static predicate routing a round through the participation-sparse
+        gather plane (`corrupt` sees the full upload stack, so it keeps the
+        dense path — attack evaluation is not a perf path).  Shared by both
+        halves so a split round can never disagree about its plane."""
+        K = ctx.x.shape[0]
+        return (present(ctx.mask) and ctx.active_budget is not None
+                and ctx.active_budget < K and self.corrupt is None)
+
+    def round_start(self, state: RoundState, ctx: BatchCtx, rng):
+        """"1. Update" + "2. Prediction": everything up to (and including)
+        the round's upload — the leg that depends only on the round's input
+        state.  Returns the in-flight `(wk, sk, ouk, up_loss, probs)`
+        buffers `round_finish` consumes (m-lane on the sparse plane).  Both
+        halves draw the full ``split(rng, 4)`` so every sub-key lands on
+        bitwise the fused round's consumer."""
+        spec_u, _ = self._specs()
         wk, sk = state.clients.params, state.clients.model_state
-        ouk, odk = state.clients.opt_update, state.clients.opt_distill
-        wg, sg = state.server.params, state.server.model_state
-        odg = state.server.opt_distill
+        ouk = state.clients.opt_update
         K = ctx.x.shape[0]
         masked = present(ctx.mask)
-        if (masked and ctx.active_budget is not None
-                and ctx.active_budget < K and self.corrupt is None):
-            # participation-sparse plane: compute only the active clients
-            # (`corrupt` sees the full upload stack, so it keeps the dense
-            # path — attack evaluation is not a perf path)
-            return self._sparse_round(state, ctx, rng, ctx.active_budget)
-        r1, r2, r3, r4 = jax.random.split(rng, 4)
+        if self._is_sparse(ctx):
+            return self._sparse_start(state, ctx, rng, ctx.active_budget)
+        r1, _r2, r3, _r4 = jax.random.split(rng, 4)
         xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
 
         # 1. Update (always computed for the full stack — a fused where keeps
@@ -400,6 +416,25 @@ class DSFLAlgorithm:
                          )(wk, sk)
         if self.corrupt is not None:
             probs = self.corrupt(probs, xo, r3)
+        return (wk, sk, ouk, up_loss, probs)
+
+    def round_finish(self, state: RoundState, ctx: BatchCtx, inflight, rng):
+        """"3-6'. Upload / Aggregation / Broadcast / Distillation": consume
+        the in-flight upload buffers.  ``state`` supplies only what the
+        start leg did not touch (distill optimizers + the server model)."""
+        hp = self.hp
+        _spec_u, spec_d = self._specs()
+        odk = state.clients.opt_distill
+        wg, sg = state.server.params, state.server.model_state
+        odg = state.server.opt_distill
+        K = ctx.x.shape[0]
+        masked = present(ctx.mask)
+        if self._is_sparse(ctx):
+            return self._sparse_finish(state, ctx, inflight, rng,
+                                       ctx.active_budget)
+        _r1, r2, _r3, r4 = jax.random.split(rng, 4)
+        xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
+        wk, sk, ouk, up_loss, probs = inflight
 
         # 3-5. Upload / Aggregation / Broadcast
         if masked:
@@ -464,30 +499,29 @@ class DSFLAlgorithm:
             server=ServerState(wg, sg, odg))
         return new, metrics
 
-    def _sparse_round(self, state: RoundState, ctx: BatchCtx, rng, m: int):
-        """Participation-sparse round: gather the <= m active lanes of the
-        client stack, run "1. Update" / "2. Prediction" / "6. Distillation"
-        vmapped over only the (m, ...) slice, and scatter results back —
-        ~K/m less client compute and activation memory, **bitwise identical**
-        to the dense masked round (pinned by tests/test_engine_scan.py):
-        per-client math sees the same inputs and the same per-client keys,
-        and padding lanes carry exactly zero aggregation weight."""
-        hp = self.hp
-        spec_u, spec_d = self._specs()
+    def _sparse_start(self, state: RoundState, ctx: BatchCtx, rng, m: int):
+        """Participation-sparse start leg: gather the <= m active lanes of
+        the client stack and run "1. Update" / "2. Prediction" vmapped over
+        only the (m, ...) slice — ~K/m less client compute and activation
+        memory, **bitwise identical** to the dense masked round (pinned by
+        tests/test_engine_scan.py): per-client math sees the same inputs
+        and the same per-client keys, and padding lanes carry exactly zero
+        aggregation weight.  Returns the m-lane in-flight buffers; ``idx``
+        is re-derived by the finish leg (a pure, cheap argsort), keeping
+        the exchange buffers O(m)."""
+        spec_u, _ = self._specs()
         wk, sk = state.clients.params, state.clients.model_state
-        ouk, odk = state.clients.opt_update, state.clients.opt_distill
-        wg, sg = state.server.params, state.server.model_state
-        odg = state.server.opt_distill
+        ouk = state.clients.opt_update
         K = ctx.x.shape[0]
         # identical key discipline to the dense round (r3 would feed
         # `corrupt`, which forces the dense path; split to keep key parity)
-        r1, r2, _r3, r4 = jax.random.split(rng, 4)
+        r1, _r2, _r3, _r4 = jax.random.split(rng, 4)
         xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
 
         idx = active_indices(ctx.mask, m)
         mask_m = jnp.take(ctx.mask, idx, axis=0)
         x_m, y_m = gather_clients((ctx.x, ctx.y), idx)
-        wk_m, sk_m, ouk_m, odk_m = gather_clients((wk, sk, ouk, odk), idx)
+        wk_m, sk_m, ouk_m = gather_clients((wk, sk, ouk), idx)
 
         # 1. Update — only the gathered lanes; per-client keys gathered out
         # of the same (K,) split the dense round draws, so every active
@@ -500,10 +534,30 @@ class DSFLAlgorithm:
         wk_m, sk_m, ouk_m = select_clients(mask_m, (wk_n, sk_n, ouk_n),
                                            (wk_m, sk_m, ouk_m))
 
-        # 2. Prediction on the active lanes, scattered into exact zeros so
-        # the shared masked aggregation sees its usual (K, n, C) stack
+        # 2. Prediction on the active lanes (the finish leg scatters into
+        # exact zeros so the masked aggregation sees its (K, n, C) stack)
         probs_m = jax.vmap(lambda w, s: predict_probs(self.apply_fn, w, s, xo)
                            )(wk_m, sk_m)
+        return (wk_m, sk_m, ouk_m, up_loss, probs_m)
+
+    def _sparse_finish(self, state: RoundState, ctx: BatchCtx, inflight,
+                       rng, m: int):
+        """Participation-sparse finish leg: scatter the in-flight m-lane
+        uploads into the shared masked aggregation, distill the gathered
+        lanes, and scatter results back into the dense stacks."""
+        _spec_u, spec_d = self._specs()
+        wk, sk = state.clients.params, state.clients.model_state
+        ouk, odk = state.clients.opt_update, state.clients.opt_distill
+        wg, sg = state.server.params, state.server.model_state
+        odg = state.server.opt_distill
+        K = ctx.x.shape[0]
+        _r1, r2, _r3, r4 = jax.random.split(rng, 4)
+        xo = jnp.take(ctx.open_x, ctx.o_idx, axis=0)
+
+        idx = active_indices(ctx.mask, m)
+        mask_m = jnp.take(ctx.mask, idx, axis=0)
+        odk_m = gather_clients(odk, idx)
+        wk_m, sk_m, ouk_m, up_loss, probs_m = inflight
         probs = scatter_zeros(probs_m, K, idx)
 
         # 3-5. verbatim the dense masked aggregation on the scattered stack

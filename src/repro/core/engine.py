@@ -107,6 +107,7 @@ class FedEngine:
         self._round = None       # manual override slot (None = use the cache)
         self._round_cache = {}   # (state, ctx) treedef -> jitted round
         self._chunk_cache = {}   # scan signature -> jitted k-round driver
+        self._round_us = {}      # schedule (overlap?) -> per-round µs samples
 
     def _build_round(self, state: RoundState, ctx: BatchCtx):
         kw = {}
@@ -138,33 +139,92 @@ class FedEngine:
         return fn
 
     def _build_chunk(self, k: int, n_open: int, n_r: int, state: RoundState,
-                     ctx0: BatchCtx, plan):
+                     ctx0: BatchCtx, plan, overlap: bool = False):
         """One jit folding k federated rounds into a ``jax.lax.scan``: the
         per-round key chain, the open-batch draw and the algorithm's round
         all run on device; metrics come back stacked over the chunk.
         ``plan`` (optional) is a dict of per-round BatchCtx overrides with a
         leading (k,) axis — e.g. a sim scheduler's participation mask —
-        scanned through as per-step inputs."""
+        scanned through as per-step inputs.
+
+        ``overlap=True`` builds the software-pipelined schedule instead:
+        the algorithm's round splits into ``round_start`` (the wire leg —
+        prediction + the cross-pod upload all-gather) and ``round_finish``
+        (the compute leg), and the scan body finishes round r *then*
+        issues round r+1's start — so r+1's exchange is already in flight
+        while nothing after it in program order depends on it, and a
+        latency-hiding scheduler (`launch.platform`'s ``overlap`` preset)
+        can sink it under r+1's private-data update leg.  The carry
+        double-buffers the in-flight exchange tensors.  Prologue (start
+        round 0) + k-1 bodies + epilogue (finish round k-1) = exactly k
+        starts and k finishes: same ops, same key chain (k ``split``s),
+        same per-round inputs — **bitwise identical** to the sequential
+        schedule (``round == finish ∘ start`` by construction; pinned by
+        ``tests/test_overlap.py`` / ``tests/test_engine_scan.py``)."""
         algo = self.algo
         uses_open = algo.uses_open
+
+        def draw(rng):
+            """The engine's per-round RNG discipline, shared verbatim by
+            both schedules: one 3-way split, o_r drawn from ``ri``."""
+            rng, rk, ri = jax.random.split(rng, 3)
+            o_idx = (jax.random.choice(ri, n_open, (n_r,), replace=False)
+                     if uses_open else EMPTY)
+            return rng, rk, o_idx
+
+        def mk_ctx(ctx0, o_idx, step):
+            ctx = ctx0
+            if uses_open:
+                ctx = dataclasses.replace(ctx, o_idx=o_idx)
+            if step is not None:
+                ctx = dataclasses.replace(ctx, **step)
+            return ctx
 
         def chunk_fn(state, ctx0, rng, plan):
             def body(carry, step):
                 state, rng = carry
-                rng, rk, ri = jax.random.split(rng, 3)
-                ctx = ctx0
-                if uses_open:
-                    o_idx = jax.random.choice(ri, n_open, (n_r,),
-                                              replace=False)
-                    ctx = dataclasses.replace(ctx, o_idx=o_idx)
-                if step is not None:
-                    ctx = dataclasses.replace(ctx, **step)
-                state, m = algo.round(state, ctx, rk)
+                rng, rk, o_idx = draw(rng)
+                state, m = algo.round(state, mk_ctx(ctx0, o_idx, step), rk)
                 return (state, rng), m
             (state, rng), ms = jax.lax.scan(body, (state, rng), plan,
                                             length=k)
             return state, rng, ms
 
+        def chunk_fn_pipelined(state, ctx0, rng, plan):
+            # prologue: put round 0's exchange in flight
+            rng, rk, o_idx = draw(rng)
+            step0 = (None if plan is None
+                     else jax.tree.map(lambda v: v[0], plan))
+            inflight = algo.round_start(state, mk_ctx(ctx0, o_idx, step0),
+                                        rk)
+
+            def body(carry, step_next):
+                state, rng, inflight, rk, o_idx, step = carry
+                # finish round r with the buffers issued one body earlier...
+                state, m = algo.round_finish(
+                    state, mk_ctx(ctx0, o_idx, step), inflight, rk)
+                # ...then issue round r+1's exchange against the fresh state
+                rng, rk2, o_idx2 = draw(rng)
+                inflight2 = algo.round_start(
+                    state, mk_ctx(ctx0, o_idx2, step_next), rk2)
+                return (state, rng, inflight2, rk2, o_idx2, step_next), m
+
+            rest = (None if plan is None
+                    else jax.tree.map(lambda v: v[1:], plan))
+            carry = (state, rng, inflight, rk, o_idx, step0)
+            (state, rng, inflight, rk, o_idx, step0), ms = jax.lax.scan(
+                body, carry, rest, length=k - 1)
+            # epilogue: round k-1's finish (its start was the last body's —
+            # or the prologue's, when k == 1 and the scan runs zero bodies)
+            state, m_last = algo.round_finish(
+                state, mk_ctx(ctx0, o_idx, step0), inflight, rk)
+            ms = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                ms, m_last)
+            return state, rng, ms
+
+        if overlap:
+            chunk_fn = chunk_fn_pipelined
         kw = {}
         if self.donate_state:
             kw["donate_argnums"] = (0,)
@@ -186,13 +246,16 @@ class FedEngine:
         return jax.jit(chunk_fn, **kw)
 
     def _get_chunk(self, k: int, n_open: int, n_r: int, state: RoundState,
-                   ctx0: BatchCtx, plan):
-        key = (k, n_open, n_r,
+                   ctx0: BatchCtx, plan, overlap: bool = False):
+        # `overlap` keys the cache: each schedule holds its own compiled
+        # program, so toggling it between runs is a dict hit, not a
+        # recompile (pinned by tests/test_overlap.py's JitCacheWatch)
+        key = (k, n_open, n_r, overlap,
                jax.tree_util.tree_structure((state, ctx0, plan)))
         fn = self._chunk_cache.get(key)
         if fn is None:
             fn = self._chunk_cache[key] = self._build_chunk(
-                k, n_open, n_r, state, ctx0, plan)
+                k, n_open, n_r, state, ctx0, plan, overlap=overlap)
         return fn
 
     # ------------------------------------------------------------- setup ----
@@ -221,7 +284,8 @@ class FedEngine:
             weights=EMPTY, log_every: int = 1,
             start_round: Optional[int] = None, chunk_rounds: int = 1,
             ctx_plan=None, active_budget: Optional[int] = None,
-            cohort=EMPTY, population: Optional[int] = None) -> RoundState:
+            cohort=EMPTY, population: Optional[int] = None,
+            overlap: bool = False) -> RoundState:
         """Run ``rounds`` federated rounds starting at ``start_round``
         (default: ``self.rounds_done``, which ``load_state`` restores from a
         checkpoint).  The per-round RNG chain is fast-forwarded past the
@@ -252,8 +316,23 @@ class FedEngine:
         for per-client key derivation (see ``BatchCtx``).  The engine's own
         machinery — treedef-keyed round caches, fused scan, ctx plans,
         sparse budget — is oblivious to the distinction; the host-side
-        slab orchestration lives in `repro.sim.runner.CohortRunner`."""
+        slab orchestration lives in `repro.sim.runner.CohortRunner`.
+
+        ``overlap=True`` runs the fused chunks on the software-pipelined
+        schedule: each scan body finishes round r and immediately issues
+        round r+1's logit exchange (``algo.round_start``), double-buffering
+        the in-flight upload tensors so the cross-pod all-gather can hide
+        behind the next round's private-data compute (see ``_build_chunk``).
+        Bitwise identical to ``overlap=False`` — the pinned baseline — and
+        requires the algorithm to expose the ``round_start``/``round_finish``
+        halves; the per-round loop path has nothing to pipeline and falls
+        back to the sequential round with a warning."""
         hp = self.algo.hp
+        if overlap and getattr(self.algo, "round_start", None) is None:
+            raise ValueError(
+                f"overlap=True needs algorithm {self.algo.name!r} to expose "
+                f"round_start/round_finish (the pipelined round halves); "
+                f"{type(self.algo).__name__} has no round_start")
         rounds = hp.rounds if rounds is None else rounds
         start = self.rounds_done if start_round is None else start_round
         if ctx_plan is not None:
@@ -304,7 +383,16 @@ class FedEngine:
                     stacklevel=2)
             return self._run_scanned(state, data, rounds, weights, log_every,
                                      start, rng, chunk, ctx_plan, n_open, n_r,
-                                     active_budget, cohort, population)
+                                     active_budget, cohort, population,
+                                     overlap)
+        if overlap:
+            import warnings
+            warnings.warn(
+                "overlap=True only pipelines the fused scan path; the "
+                "per-round loop (chunk_rounds<=1, or per-round host hooks) "
+                "has nothing to double-buffer and runs the sequential "
+                "round — which is bitwise the same schedule anyway",
+                stacklevel=2)
         fn = None
         for r in range(start, start + rounds):
             rng, rk, ri = jax.random.split(rng, 3)
@@ -360,7 +448,9 @@ class FedEngine:
 
     def _run_scanned(self, state, data, rounds, weights, log_every, start,
                      rng, chunk, ctx_plan, n_open, n_r, active_budget=None,
-                     cohort=EMPTY, population=None) -> RoundState:
+                     cohort=EMPTY, population=None,
+                     overlap: bool = False) -> RoundState:
+        import time
         r, end, n_chunks = start, start + rounds, 0
         while r < end:
             k = min(chunk, end - r)
@@ -375,18 +465,22 @@ class FedEngine:
             ctx0 = self.make_ctx(data, weights=weights,
                                  active_budget=active_budget, cohort=cohort,
                                  population=population)
-            fn = self._get_chunk(k, n_open, n_r, state, ctx0, plan)
+            fn = self._get_chunk(k, n_open, n_r, state, ctx0, plan,
+                                 overlap=overlap)
             # the span covers dispatch through the chunk's one host sync
             # (device_get below) — all instrumentation sits OUTSIDE the
             # compiled scan, so the fused path stays bitwise identical and
             # keeps its one-sync-per-chunk discipline
-            with obs.span("engine.chunk", "engine", rounds=k, start_round=r):
+            t0 = time.perf_counter()
+            with obs.span("engine.chunk", "engine", rounds=k, start_round=r,
+                          overlap=overlap):
                 state, rng, ms = fn(state, ctx0, rng, plan)
                 self.last_metrics = {key: v[-1] for key, v in ms.items()}
                 # one host sync per chunk: the stacked per-round scalars land
                 # together instead of one float() device round-trip per round
                 scalars = jax.device_get({key: v for key, v in ms.items()
                                           if jnp.ndim(v) == 1})
+            self._note_chunk_time(overlap, k, time.perf_counter() - t0)
             for i in range(k):
                 if (r + i + 1) % log_every != 0:
                     continue
@@ -406,6 +500,28 @@ class FedEngine:
             reg.counter("engine.rounds").inc(rounds)
             reg.counter("engine.chunks").inc(n_chunks)
         return state
+
+    def _note_chunk_time(self, overlap: bool, k: int, seconds: float) -> None:
+        """Host-side schedule telemetry, sampled only at chunk boundaries so
+        the compiled scan keeps its bitwise-parity and one-sync-per-chunk
+        contracts.  Each chunk contributes one per-round wallclock sample
+        to its schedule's bucket; once this engine has timed BOTH schedules
+        the ``engine.comm_hidden_us`` gauge reports the per-round time the
+        pipelined schedule hides (mean serialized - mean pipelined).  The
+        pipelined path additionally marks its in-flight exchange with a
+        ``wire.exchange`` instant — dispatch-side, since the all-gather
+        itself retires inside the compiled chunk."""
+        us = seconds * 1e6 / max(k, 1)
+        self._round_us.setdefault(bool(overlap), []).append(us)
+        if overlap:
+            obs.instant("wire.exchange", "wire", inflight=True, rounds=k)
+            obs.instant("overlap", "engine", rounds=k,
+                        per_round_us=round(us, 3))
+        reg = obs.current_registry()
+        ser, pipe = self._round_us.get(False), self._round_us.get(True)
+        if reg is not None and ser and pipe:
+            hidden = sum(ser) / len(ser) - sum(pipe) / len(pipe)
+            reg.gauge("engine.comm_hidden_us").set(round(hidden, 3))
 
     # -------------------------------------------------------- comm bytes ----
     def _payload_ctx(self, data) -> BatchCtx:

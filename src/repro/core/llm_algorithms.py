@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from ..models.base import ModelConfig
 from .aggregation import participation_weights
 from .algorithms import BatchCtx, ClientState, EMPTY, RoundState, present
-from .llm_dsfl import (LLMDsflHP, dsfl_round_step, fedavg_round_step,
+from .llm_dsfl import (LLMDsflHP, dsfl_exchange, dsfl_round_finish,
+                       dsfl_round_step, fedavg_round_step,
                        predict_open_probs)
 
 
@@ -117,6 +118,36 @@ class LLMDSFLAlgorithm:
         open_b = _take_open(ctx.open_x, ctx.o_idx)
         new, loss = dsfl_round_step(
             self.cfg, state.clients.params, ctx.x, open_b, self.hp,
+            weights=_participation(ctx, self.hp.staleness_decay),
+            mask=ctx.mask if present(ctx.mask) else None,
+            active_budget=ctx.active_budget)
+        return RoundState(clients=ClientState(params=new)), {"loss": loss}
+
+    # -- pipelined round halves (engine `overlap=True` path) ----------------
+    # round == round_finish(state, ctx, round_start(state, ctx, rng), rng)
+    # bitwise: the halves are the same ops in the same order, just split at
+    # the wire boundary so the scan body can issue round r+1's exchange
+    # before round r's compute leg retires.
+    def round_start(self, state: RoundState, ctx: BatchCtx, rng):
+        """Issue the round's WIRE leg: open-batch prediction + the cross-pod
+        all-gather of the (compressed) uploads.  Returns the in-flight
+        exchange buffers; depends only on the round's input params."""
+        del rng   # dsfl_round_step is deterministic given the batches
+        open_b = _take_open(ctx.open_x, ctx.o_idx)
+        return dsfl_exchange(
+            self.cfg, state.clients.params, open_b, self.hp,
+            weights=_participation(ctx, self.hp.staleness_decay),
+            mask=ctx.mask if present(ctx.mask) else None,
+            active_budget=ctx.active_budget)
+
+    def round_finish(self, state: RoundState, ctx: BatchCtx, inflight, rng):
+        """Consume the in-flight exchange: aggregate the teacher and run the
+        hybrid CE+KD client step (the leg whose private-data branch never
+        touches ``inflight`` — the slack the wire hides behind)."""
+        del rng
+        open_b = _take_open(ctx.open_x, ctx.o_idx)
+        new, loss = dsfl_round_finish(
+            self.cfg, state.clients.params, ctx.x, open_b, inflight, self.hp,
             weights=_participation(ctx, self.hp.staleness_decay),
             mask=ctx.mask if present(ctx.mask) else None,
             active_budget=ctx.active_budget)

@@ -124,10 +124,126 @@ def predict_open_probs(cfg: ModelConfig, params, open_batch):
                           ).astype(jnp.bfloat16)
 
 
+def _is_sparse_round(K: int, hp: LLMDsflHP, weights, active_budget) -> bool:
+    """The (static, trace-time) predicate routing a round through the
+    participation-sparse gather plane.  Shared by the exchange and finish
+    halves so a split round can never disagree with the fused one about
+    which plane it is on."""
+    return (weights is not None and active_budget is not None
+            and active_budget < K and hp.topk is None)
+
+
+def dsfl_exchange(cfg: ModelConfig, stacked_params, open_batch,
+                  hp: LLMDsflHP, weights=None, mask=None,
+                  active_budget=None):
+    """The WIRE leg of a DS-FL round: "2. Prediction" + "3. Upload".
+
+    Everything in the round up to (and including) the cross-pod
+    all-gather, and nothing after it: clients predict on the shared open
+    batch and their uploads leave the pod.  Returns the in-flight
+    exchange buffers `dsfl_round_finish` consumes —
+
+      * ``hp.topk``: the pod-gathered ``(values, indices)`` pair — the
+        (K, B, S, k) compressed uploads after the explicit shard_map
+        all-gather (k*(4+4) bytes/token of inter-pod traffic);
+      * dense: the full (K, B, S, V) probability stack;
+      * participation-sparse: the (m, B, S, V) active-lane stack (the
+        finish leg scatters it into exact zeros).
+
+    Splitting here is what lets the engine's pipelined scan issue round
+    r's all-gather before round r's compute leg: the buffers returned
+    here depend only on the round's *input* params, while most of the
+    finish leg (the private-data CE branch of the hybrid client step)
+    never touches them — so a latency-hiding scheduler can overlap the
+    gather with that compute without changing a single op.  The split is
+    pure restructuring: ``dsfl_round_step`` is literally
+    ``dsfl_round_finish(..., dsfl_exchange(...))``, so fused and split
+    rounds are the same jaxpr and the parity pins stay bitwise."""
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if _is_sparse_round(K, hp, weights, active_budget):
+        act = weights if mask is None else mask
+        idx = active_indices(act, active_budget)
+        params_m = gather_clients(stacked_params, idx)
+        probs_m = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
+                           )(params_m)                      # (m, B, S, V)
+        return (probs_m,)
+    probs = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
+                     )(stacked_params)                     # (Kc, B, S, V)
+    if hp.topk is not None:
+        tv, ti = jax.vmap(lambda pr: topk_compress(pr, hp.topk))(probs)
+        # force pod-replication of the SMALL uploads (the all-gather is the
+        # exchange); densification and ERA then run without dense collectives
+        # The exchange leg as an EXPLICIT collective: left to GSPMD, the
+        # partitioner moves the pod-replication point after densification
+        # and all-gathers the dense teacher (measured: 10 GB cross-pod).
+        # A pod-axis shard_map pins the all-gather on the (value, index)
+        # pairs — k*(4+4) bytes/token of inter-pod traffic.
+        _get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+        mesh = _get_mesh() if _get_mesh is not None else None
+        if mesh is not None and "pod" in mesh.axis_names:
+            from jax.sharding import PartitionSpec as P
+            sm = jax.shard_map(
+                lambda v, i: (jax.lax.all_gather(v[0], "pod"),
+                              jax.lax.all_gather(i[0], "pod")),
+                mesh=mesh,
+                in_specs=(P("pod"), P("pod")),
+                out_specs=(P(), P()),
+                axis_names={"pod"})
+            tv, ti = sm(tv, ti)
+        return (tv, ti)
+    return (probs,)
+
+
+def dsfl_round_finish(cfg: ModelConfig, stacked_params, private_batches,
+                      open_batch, inflight, hp: LLMDsflHP, weights=None,
+                      mask=None, active_budget=None):
+    """The COMPUTE leg of a DS-FL round: "4. Aggregation" + "5. Broadcast"
+    + the hybrid CE+KD client step, consuming the exchange buffers
+    `dsfl_exchange` put in flight.  The private-batch CE branch of
+    ``dsfl_client_step`` has no data dependency on ``inflight`` — only
+    the KD term and the open-branch backward seed do — which is the slack
+    the pipelined schedule hides the wire behind."""
+    from ..models.shardctx import constrain
+    K = jax.tree.leaves(stacked_params)[0].shape[0]
+    if _is_sparse_round(K, hp, weights, active_budget):
+        return _dsfl_finish_sparse(cfg, stacked_params, private_batches,
+                                   open_batch, inflight, hp, weights, mask,
+                                   active_budget)
+    if hp.topk is not None:
+        tv, ti = inflight
+        # shard-local densify: iota-compare instead of scatter (a scatter
+        # into a vocab-sharded output would replicate the dense tensor)
+        V = cfg.eff_vocab     # probs carry the padded (TP-divisible) vocab
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 1, V), 4)
+        onehot = (iota == ti[..., None]).astype(jnp.float32)   # (Kc,B,S,k,V)
+        dense = jnp.einsum("cbsk,cbskv->cbsv", tv.astype(jnp.float32), onehot)
+        dense = constrain(dense, None, "batch", None, "model")
+        teacher = _aggregate_teacher(dense, hp, weights)
+        teacher = constrain(teacher, "batch", None, "model")
+        # the exchange leg is compressed; the pod-local distillation uses the
+        # dense (vocab-sharded) teacher — no top_k over a sharded axis
+        import dataclasses
+        hp = dataclasses.replace(hp, topk=None)
+    else:
+        (probs,) = inflight
+        teacher = _aggregate_teacher(probs, hp, weights)
+
+    new_params, losses = jax.vmap(
+        lambda p, b: dsfl_client_step(cfg, p, b, open_batch, teacher, hp)
+    )(stacked_params, private_batches)
+    if weights is not None:
+        # absent clients neither update nor average into the loss
+        m = (weights if mask is None else mask).astype(jnp.float32) > 0
+        new_params = select_clients(m, new_params, stacked_params)
+        return new_params, masked_mean(losses, m)
+    return new_params, jnp.mean(losses)
+
+
 def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
                     open_batch, hp: LLMDsflHP, weights=None, mask=None,
                     active_budget=None):
-    """One full DS-FL round over the pod-sharded client axis.
+    """One full DS-FL round over the pod-sharded client axis: the
+    composition ``dsfl_round_finish(..., dsfl_exchange(...))``.
 
     stacked_params: pytree with leading (n_clients,) axis, sharded P("pod",.).
     private_batches: each leaf (n_clients, B, ...).  open_batch: (B, ...) —
@@ -156,72 +272,25 @@ def dsfl_round_step(cfg: ModelConfig, stacked_params, private_batches,
     ``weights=`` round.  The top-k exchange keeps the dense path (its
     pinned pod-axis all-gather is shaped by the full client axis).
     """
-    from ..models.shardctx import constrain
-    K = jax.tree.leaves(stacked_params)[0].shape[0]
-    if (weights is not None and active_budget is not None
-            and active_budget < K and hp.topk is None):
-        return _dsfl_round_sparse(cfg, stacked_params, private_batches,
-                                  open_batch, hp, weights, mask,
-                                  active_budget)
-    probs = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
-                     )(stacked_params)                     # (Kc, B, S, V)
-    if hp.topk is not None:
-        tv, ti = jax.vmap(lambda pr: topk_compress(pr, hp.topk))(probs)
-        # force pod-replication of the SMALL uploads (the all-gather is the
-        # exchange); densification and ERA then run without dense collectives
-        # The exchange leg as an EXPLICIT collective: left to GSPMD, the
-        # partitioner moves the pod-replication point after densification
-        # and all-gathers the dense teacher (measured: 10 GB cross-pod).
-        # A pod-axis shard_map pins the all-gather on the (value, index)
-        # pairs — k*(4+4) bytes/token of inter-pod traffic.
-        _get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
-        mesh = _get_mesh() if _get_mesh is not None else None
-        if mesh is not None and "pod" in mesh.axis_names:
-            from jax.sharding import PartitionSpec as P
-            sm = jax.shard_map(
-                lambda v, i: (jax.lax.all_gather(v[0], "pod"),
-                              jax.lax.all_gather(i[0], "pod")),
-                mesh=mesh,
-                in_specs=(P("pod"), P("pod")),
-                out_specs=(P(), P()),
-                axis_names={"pod"})
-            tv, ti = sm(tv, ti)
-        # shard-local densify: iota-compare instead of scatter (a scatter
-        # into a vocab-sharded output would replicate the dense tensor)
-        V = probs.shape[-1]
-        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 1, V), 4)
-        onehot = (iota == ti[..., None]).astype(jnp.float32)   # (Kc,B,S,k,V)
-        dense = jnp.einsum("cbsk,cbskv->cbsv", tv.astype(jnp.float32), onehot)
-        dense = constrain(dense, None, "batch", None, "model")
-        teacher = _aggregate_teacher(dense, hp, weights)
-        teacher = constrain(teacher, "batch", None, "model")
-        # the exchange leg is compressed; the pod-local distillation uses the
-        # dense (vocab-sharded) teacher — no top_k over a sharded axis
-        import dataclasses
-        hp = dataclasses.replace(hp, topk=None)
-    else:
-        teacher = _aggregate_teacher(probs, hp, weights)
-
-    new_params, losses = jax.vmap(
-        lambda p, b: dsfl_client_step(cfg, p, b, open_batch, teacher, hp)
-    )(stacked_params, private_batches)
-    if weights is not None:
-        # absent clients neither update nor average into the loss
-        m = (weights if mask is None else mask).astype(jnp.float32) > 0
-        new_params = select_clients(m, new_params, stacked_params)
-        return new_params, masked_mean(losses, m)
-    return new_params, jnp.mean(losses)
+    inflight = dsfl_exchange(cfg, stacked_params, open_batch, hp,
+                             weights=weights, mask=mask,
+                             active_budget=active_budget)
+    return dsfl_round_finish(cfg, stacked_params, private_batches,
+                             open_batch, inflight, hp, weights=weights,
+                             mask=mask, active_budget=active_budget)
 
 
-def _dsfl_round_sparse(cfg: ModelConfig, stacked_params, private_batches,
-                       open_batch, hp: LLMDsflHP, weights, mask,
-                       active_budget: int):
-    """Participation-sparse DS-FL round at pod scale: same gather ->
-    compute -> scatter plane as `algorithms.DSFLAlgorithm._sparse_round`,
-    along the pod-sharded client axis.  Bitwise identical to the dense
-    ``weights=`` round (tests/test_llm_dsfl.py): active lanes see the same
-    per-client math, and the scattered zero lanes multiply against the
-    same exact-zero aggregation weights the dense stack's lanes do."""
+def _dsfl_finish_sparse(cfg: ModelConfig, stacked_params, private_batches,
+                        open_batch, inflight, hp: LLMDsflHP, weights, mask,
+                        active_budget: int):
+    """Participation-sparse finish leg: same gather -> compute -> scatter
+    plane as `algorithms.DSFLAlgorithm._sparse_round`, along the
+    pod-sharded client axis.  Bitwise identical to the dense ``weights=``
+    round (tests/test_llm_dsfl.py): active lanes see the same per-client
+    math, and the scattered zero lanes multiply against the same
+    exact-zero aggregation weights the dense stack's lanes do.  ``idx``
+    is re-derived from the ctx (a pure, cheap argsort) rather than
+    carried in ``inflight``, so the exchange buffers stay O(m)."""
     K = jax.tree.leaves(stacked_params)[0].shape[0]
     act = weights if mask is None else mask
     idx = active_indices(act, active_budget)
@@ -229,8 +298,7 @@ def _dsfl_round_sparse(cfg: ModelConfig, stacked_params, private_batches,
     params_m = gather_clients(stacked_params, idx)
     batches_m = gather_clients(private_batches, idx)
 
-    probs_m = jax.vmap(lambda p: predict_open_probs(cfg, p, open_batch)
-                       )(params_m)                          # (m, B, S, V)
+    (probs_m,) = inflight                                   # (m, B, S, V)
     teacher = _aggregate_teacher(scatter_zeros(probs_m, K, idx), hp, weights)
 
     new_m, losses_m = jax.vmap(

@@ -24,6 +24,7 @@ from ..configs import get_config, list_archs
 from ..models.api import (model_decode_step, model_init, model_prefill)
 from ..obs import cli as obs_cli
 from ..serve import AdmissionQueue, ServeEngine
+from . import platform
 from .train import extra_inputs
 
 
@@ -88,8 +89,11 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lockstep", action="store_true",
                     help="pre-subsystem whole-batch baseline path")
+    platform.add_args(ap)
     obs_cli.add_args(ap)
     args = ap.parse_args(argv)
+    # preset before backend init: XLA_FLAGS are read once
+    platform.from_args(args)
     with obs_cli.session(args):
         run(args)
 

@@ -26,11 +26,20 @@ loop, minus its per-round dispatch overhead.  Under ``--participation``/
 whole chunk's participation a priori and the (k, K) mask/stale plan rides
 through the scan as per-step ctx inputs.
 
+``--overlap`` software-pipelines the fused chunk: round r+1's logit
+exchange (the cross-pod all-gather) is issued before round r's local
+compute retires, so the wire hides behind compute.  Bitwise identical to
+the sequential schedule — same ops, same order, split at the wire
+boundary.  Pair it with ``--platform-preset overlap`` (or
+``overlap-cpu8`` on CPU), which turns on XLA's latency-hiding scheduler
+and async-collective lowering so the compiler actually exploits the slack
+the schedule exposes.
+
 On this CPU container use ``--smoke`` (reduced config).  Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --smoke \
-      --mode dsfl --clients 2 --steps 20 --chunk-rounds 5 \
-      [--participation 0.5 --straggler 30]
+      --mode dsfl --clients 2 --steps 20 --chunk-rounds 5 --overlap \
+      --platform-preset overlap-cpu8 [--participation 0.5 --straggler 30]
 """
 from __future__ import annotations
 
@@ -53,6 +62,7 @@ from ..models.base import param_count
 from ..models.shardctx import axis_ctx
 from ..checkpoint import save_pytree
 from ..obs import cli as obs_cli
+from . import platform
 from .mesh import make_client_mesh
 
 
@@ -97,10 +107,19 @@ def main(argv=None):
                          "identical to the per-round loop); with "
                          "--participation/--straggler this runs the fused "
                          "sim path (sync participation planned per chunk)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="software-pipeline the fused chunk: issue round "
+                         "r+1's logit exchange before round r's compute "
+                         "retires (bitwise identical to the sequential "
+                         "schedule; needs --chunk-rounds >= 2)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    platform.add_args(ap)
     obs_cli.add_args(ap)
     args = ap.parse_args(argv)
+    # apply the XLA preset BEFORE anything touches the backend (obs session
+    # provenance included) — XLA_FLAGS are read once at backend init
+    platform.from_args(args)
     with obs_cli.session(args):
         run(args)
 
@@ -144,6 +163,9 @@ def run(args):
               f"(FedAvg parameter exchange would be "
               f"{fmt_bytes(fedavg_bytes)})")
         simulate = args.participation < 1.0 or args.straggler is not None
+        if simulate and args.overlap:
+            print("note: --overlap applies to the direct engine path; the "
+                  "sim-routed rounds keep the sequential schedule")
         if simulate:
             # event-driven fleet: lognormal mobile links, uniform-K
             # participation, optional straggler deadline — the round runs
@@ -169,7 +191,8 @@ def run(args):
                               f"{rec['participants']}/{K} clients  "
                               f"{dt:.2f}s/round", flush=True)
                 else:
-                    state = eng.run(state, task, rounds=k, chunk_rounds=k)
+                    state = eng.run(state, task, rounds=k, chunk_rounds=k,
+                                    overlap=args.overlap)
                     dt = (time.time() - t0) / k
                     for rec in eng.history[-k:]:
                         print(f"round {rec['round']-1:3d}  "

@@ -44,6 +44,8 @@ class RunProvenance:
     python: Optional[str] = None
     x64: Optional[bool] = None
     kernel_interpret: Optional[bool] = None
+    platform_preset: Optional[str] = None
+    xla_flags: Optional[str] = None
     argv: Optional[str] = None
 
     @classmethod
@@ -75,12 +77,21 @@ class RunProvenance:
             interpret = bool(resolve_interpret(None))
         except Exception:  # pragma: no cover - kernels unavailable
             pass
+        preset = None
+        try:
+            from ..launch.platform import active
+            p = active()
+            preset = p.name if p is not None else None
+        except Exception:  # pragma: no cover - launch plane unavailable
+            pass
         return cls(git_sha=sha, git_dirty=dirty, jax_version=jax_version,
                    jaxlib_version=jaxlib_version, backend=backend,
                    n_devices=n_devices,
                    platform=_platform.platform(),
                    python=_platform.python_version(),
                    x64=x64, kernel_interpret=interpret,
+                   platform_preset=preset,
+                   xla_flags=os.environ.get("XLA_FLAGS"),
                    argv=" ".join(sys.argv))
 
     def asdict(self) -> dict:

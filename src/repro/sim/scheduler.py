@@ -240,14 +240,23 @@ class AsyncBufferScheduler:
     jitter_sigma: float = 0.0
     clock: VirtualClock = field(default_factory=VirtualClock)
     _arrival: np.ndarray = None          # (K,) next upload landing time
-    _labels_from: np.ndarray = None      # (K,) label version each client
-    #                                      trains against
-    _heap: list = None                   # cohort path: (arrival, id) heap —
-    #                                      O(K) once, O(M log K) per round
+    _labels_from: np.ndarray = None      # dense path: (K,) label version
+    #                                      each client trains against
+    _heap: list = None                   # cohort path: (arrival, id) heap of
+    #                                      MATERIALIZED arrivals only
+    _labels: dict = None                 # cohort path: {id: label version} —
+    #                                      O(#touched) form of the same book
+    _cal: dict = None                    # cohort path: calendar-queue cursor
+    #                                      (scalars only; see next_cohort)
     _round: int = 0
 
     idealized = False   # masks/staleness are structural in async mode
     plannable = False   # buffered-async rounds stay on the per-round path
+
+    # how many equal-population (quantile) latency bands the calendar splits
+    # the fleet into; each band materializes its heap entries only when the
+    # pop frontier reaches its start time
+    CAL_BUCKETS = 64
 
     @property
     def active_budget(self) -> int:
@@ -260,8 +269,8 @@ class AsyncBufferScheduler:
         K = self.population.n_clients
         if not 1 <= self.buffer_size <= K:
             raise ValueError(f"buffer_size {self.buffer_size} not in [1, {K}]")
-        if self._labels_from is None:
-            self._labels_from = np.zeros(K, np.int64)
+        if self._labels is None:
+            self._labels = {}
 
     def _latency(self, rng, up_bytes, down_bytes) -> np.ndarray:
         lat = self.population.latency(up_bytes, down_bytes)
@@ -275,6 +284,8 @@ class AsyncBufferScheduler:
         K = self.population.n_clients
         if self._arrival is None:        # everyone starts training at t=0
             self._arrival = self._latency(rng, up_bytes, down_bytes)
+        if self._labels_from is None:    # dense book, lazily (dense path only)
+            self._labels_from = np.zeros(K, np.int64)
         t0 = self.clock.now
         order = np.argsort(self._arrival, kind="stable")
         idx = order[:self.buffer_size]
@@ -294,27 +305,86 @@ class AsyncBufferScheduler:
         return RoundPlan(mask, staleness, t0, self.clock.now,
                          np.zeros(K, bool))
 
+    def _open_bucket(self, rng: np.random.Generator) -> None:
+        """Materialize the next calendar bucket: the vectorized numpy filter
+        selects the ids whose BASE latency falls in the band, their (jittered)
+        first arrivals become heap entries, and the cursor advances.  The
+        (K,) base-latency vector is recomputed from the `ClientPopulation`
+        model each opening — a transient vectorized pass, so the scheduler
+        itself never holds per-client arrival state for untouched clients."""
+        cal = self._cal
+        j = cal["next"]
+        lat = self.population.latency(cal["up"], cal["down"])
+        bounds = cal["bounds"]
+        if j == len(bounds) - 2:
+            sel = lat >= bounds[j]       # last band is closed at hi
+        else:
+            sel = (lat >= bounds[j]) & (lat < bounds[j + 1])
+        ids = np.flatnonzero(sel)
+        t = lat[ids]
+        if self.jitter_sigma > 0 and ids.size:
+            t = t * rng.lognormal(0.0, self.jitter_sigma, ids.size)
+        for i, ti in zip(ids, t):
+            heapq.heappush(self._heap, (float(ti), int(i)))
+        cal["next"] = j + 1
+
     def next_cohort(self, rng: np.random.Generator, up_bytes: float,
                     down_bytes: float) -> CohortPlan:
-        """`next_round`'s heap form: the arrival queue is a binary heap of
-        ``(time, id)`` built once (O(K) — every client trains continuously,
-        so all K arrival times are structural async state), and each
-        aggregation pops/re-arms only the M buffer members — O(M log K) per
-        round instead of the dense path's fresh (K,)-argsort.  Ties break
-        on the lower id, matching the stable argsort.  Use either form on
-        one scheduler instance, not both (separate arrival books)."""
+        """`next_round`'s lazy calendar-queue form (ROADMAP Open item 2b).
+
+        The heap holds only MATERIALIZED arrivals: clients that already
+        contributed (their re-armed next upload) plus the clients whose
+        first arrival falls in an already-opened calendar bucket.  The
+        first call computes only the ``CAL_BUCKETS + 1`` quantile boundaries
+        of the base-latency distribution (equal-*population* bands, so a
+        heavy-tailed fleet can't collapse into one band), and each band's
+        first arrivals are materialized (`_open_bucket`) only when the pop
+        frontier reaches its start time.  A million-client fleet whose
+        simulation aggregates R rounds therefore holds O(popped + opened
+        bands) heap entries instead of an eagerly heapified K, and the
+        label-version book is an O(#touched) dict.
+
+        Pops and re-arms stay O(M log heap) per round; a pop is taken only
+        when no unopened band could still hold an earlier first arrival
+        (``heap[0] < next band's start``).  Ties break on the lower id,
+        matching the dense path's stable argsort.  With ``jitter_sigma=0``
+        realized rounds equal `next_round`'s exactly (the pinned parity);
+        with jitter a first arrival can land outside its base-latency band
+        but is still released when the BASE band opens, so the realized
+        stream is a valid sample of the same fleet model without a
+        touched-set — it just differs from the eager-heap draw.  Use
+        either form on one scheduler instance, not both (separate books).
+        """
         pop = self.population
-        if self._heap is None:           # everyone starts training at t=0
-            lat = self._latency(rng, up_bytes, down_bytes)
-            self._heap = [(float(t), i) for i, t in enumerate(lat)]
-            heapq.heapify(self._heap)
+        if self._cal is None:            # everyone starts training at t=0:
+            # O(n_buckets) QUANTILE boundaries, not equal-width bands — a
+            # heavy-tailed fleet (lognormal compute) would put most of its
+            # mass in the first linear band, re-eagerizing the queue; equal
+            # *population* bands keep every opening ~K/n_buckets.  The (K,)
+            # base-latency pass is transient; only the boundaries persist.
+            lat = pop.latency(up_bytes, down_bytes)
+            n_b = int(min(self.CAL_BUCKETS,
+                          max(1, pop.n_clients // max(1, self.buffer_size))))
+            bounds = np.quantile(lat, np.linspace(0.0, 1.0, n_b + 1))
+            self._cal = {"bounds": [float(b) for b in bounds],
+                         "next": 0, "up": float(up_bytes),
+                         "down": float(down_bytes)}
+            self._heap = []
         t0 = self.clock.now
-        popped = [heapq.heappop(self._heap)
-                  for _ in range(self.buffer_size)]
+        cal, popped = self._cal, []
+        n_b = len(cal["bounds"]) - 1
+        for _ in range(self.buffer_size):
+            while cal["next"] < n_b and (
+                    not self._heap
+                    or self._heap[0][0] >= cal["bounds"][cal["next"]]):
+                self._open_bucket(rng)
+            popped.append(heapq.heappop(self._heap))
         self.clock.advance(max(0.0, max(t for t, _ in popped) - t0))
         ids = np.array(sorted(i for _, i in popped), np.int64)
-        staleness = self._round - self._labels_from[ids]
-        self._labels_from[ids] = self._round + 1
+        staleness = np.array([self._round - self._labels.get(int(i), 0)
+                              for i in ids], np.int64)
+        for i in ids:
+            self._labels[int(i)] = self._round + 1
         lat = pop.latency_ids(ids, up_bytes, down_bytes)
         if self.jitter_sigma > 0:
             lat = lat * rng.lognormal(0.0, self.jitter_sigma, ids.size)
@@ -327,21 +397,37 @@ class AsyncBufferScheduler:
 
     # ---------------------------------------------------------- checkpoint --
     def state(self) -> dict:
+        """Everything the two arrival books need to resume: the dense path's
+        (K,) arrays, and the cohort path's O(#touched) heap + label dict +
+        calendar cursor (scalars).  An untouched book serializes as None/{}
+        so a million-client cohort checkpoint stays O(#touched)."""
         return {"now": self.clock.now, "round": self._round,
                 "arrival": (None if self._arrival is None
                             else self._arrival.tolist()),
-                "labels_from": self._labels_from.tolist(),
+                "labels_from": (None if self._labels_from is None
+                                else self._labels_from.tolist()),
                 "heap": (None if self._heap is None
-                         else [[t, int(i)] for t, i in self._heap])}
+                         else [[t, int(i)] for t, i in self._heap]),
+                "labels": {str(k): int(v) for k, v in self._labels.items()},
+                "cal": (None if self._cal is None else dict(self._cal))}
 
     def set_state(self, s: dict) -> None:
         self.clock.now = float(s["now"])
         self._round = int(s["round"])
         self._arrival = (None if s["arrival"] is None
                          else np.asarray(s["arrival"], np.float64))
-        self._labels_from = np.asarray(s["labels_from"], np.int64)
+        lf = s.get("labels_from")
+        self._labels_from = (None if lf is None
+                             else np.asarray(lf, np.int64))
         heap = s.get("heap")
         self._heap = (None if heap is None
                       else [(float(t), int(i)) for t, i in heap])
         if self._heap is not None:
             heapq.heapify(self._heap)
+        self._labels = {int(k): int(v)
+                        for k, v in s.get("labels", {}).items()}
+        cal = s.get("cal")
+        self._cal = None if cal is None else {
+            "bounds": [float(b) for b in cal["bounds"]],
+            "next": int(cal["next"]),
+            "up": float(cal["up"]), "down": float(cal["down"])}

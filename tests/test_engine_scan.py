@@ -43,11 +43,12 @@ def _assert_states_equal(a, b):
 
 
 def _run(algo, task, rounds=R, chunk=1, weights=(), ev=None, log_every=1,
-         ctx_plan=None):
+         ctx_plan=None, active_budget=None, overlap=False):
     eng = FedEngine(algo, ev)
     state = eng.run(eng.init(_init, task), task, rounds=rounds,
                     weights=weights, log_every=log_every,
-                    chunk_rounds=chunk, ctx_plan=ctx_plan)
+                    chunk_rounds=chunk, ctx_plan=ctx_plan,
+                    active_budget=active_budget, overlap=overlap)
     return eng, state
 
 
@@ -377,6 +378,126 @@ def test_sim_runner_rejects_too_small_budget(task):
                                           straggler="drop"), seed=0)
     with pytest.raises(ValueError, match="active_budget"):
         runner.run(eng.init(_init, task8), task8, rounds=1, active_budget=1)
+
+
+# ------------------------------------------------- pipelined (overlap) ------
+@pytest.mark.parametrize("kind", ["dsfl_sa", "dsfl_era", "dsfl_weighted_era"])
+@pytest.mark.parametrize("chunk", [2, 3, 8])
+def test_overlap_is_bitwise_identical_to_sequential(task, kind, chunk):
+    """The tentpole pin: software-pipelining the chunk (round r+1's
+    exchange issued before round r's compute retires) changes nothing —
+    not the final state's bits, not a single history float."""
+    e1, s1 = _run(_algo(kind, task), task, chunk=chunk)
+    e2, s2 = _run(_algo(kind, task), task, chunk=chunk, overlap=True)
+    _assert_states_equal(s1, s2)
+    assert e1.history == e2.history
+
+
+def test_overlap_parity_masked_and_sparse(task):
+    """The pipelined schedule composes with the participation planes: the
+    dense-masked and sparse-budget runs stay bitwise under overlap."""
+    plan, need = _mask_plan(3)
+    for budget in (None, need):
+        e1, s1 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task, chunk=3,
+                      ctx_plan=plan, active_budget=budget)
+        e2, s2 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task, chunk=3,
+                      ctx_plan=plan, active_budget=budget, overlap=True)
+        _assert_states_equal(s1, s2)
+        assert e1.history == e2.history
+
+
+def test_overlap_requires_round_start():
+    """Algorithms without the round_start/round_finish split must fail
+    loudly rather than silently running the sequential schedule."""
+    algo = FedAvgAlgorithm(apply_tiny_mlp,
+                           FedAvgConfig(rounds=1, local_epochs=1,
+                                        batch_size=20))
+    eng = FedEngine(algo)
+    task1 = build_image_task(seed=0, K=K, n_private=160, n_open=80,
+                             n_test=40, distribution="non_iid")
+    state = eng.init(_init, task1)
+    with pytest.raises(ValueError, match="round_start"):
+        eng.run(state, task1, rounds=2, chunk_rounds=2, weights=jnp.ones(K),
+                overlap=True)
+
+
+def test_overlap_on_loop_path_warns_and_matches(task):
+    """chunk_rounds=1 has no scan to pipeline: the engine says so and runs
+    the (bitwise identical) sequential loop."""
+    e1, s1 = _run(DSFLAlgorithm(apply_tiny_mlp, HP), task)
+    eng = FedEngine(DSFLAlgorithm(apply_tiny_mlp, HP))
+    state = eng.init(_init, task)
+    with pytest.warns(UserWarning, match="overlap"):
+        s2 = eng.run(state, task, rounds=R, overlap=True)
+    _assert_states_equal(s1, s2)
+    assert e1.history == eng.history
+
+
+def test_overlap_factorization_and_resume_hypothesis(task):
+    """Property: ANY factorization of the round range into pipelined and
+    sequential chunks — mixed chunk sizes, mixed overlap toggles, a
+    save/load/resume at an arbitrary chunk boundary — produces the
+    identical final state and history."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    ref_eng, ref_state = _run(algo, task)
+    ref_leaves = [np.asarray(l) for l in jax.tree.leaves(ref_state)]
+    eng = FedEngine(algo)   # one engine: its jit caches persist across runs
+
+    @st.composite
+    def segmentations(draw):
+        segs, left = [], R
+        while left > 0:
+            n = draw(st.integers(1, left))
+            # overlap only on the scan path (chunk >= 2): the loop
+            # fallback warns, which @given would surface as noise
+            segs.append((n, draw(st.integers(2, 8)),
+                         draw(st.booleans())))   # (rounds, chunk, overlap)
+            left -= n
+        return segs
+
+    @given(segmentations(), st.data())
+    @settings(deadline=None, max_examples=8,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(segs, data):
+        import tempfile
+        state = eng.init(_init, task)
+        ckpt_at = data.draw(st.integers(0, len(segs) - 1))
+        for j, (n, chunk, overlap) in enumerate(segs):
+            state = eng.run(state, task, rounds=n, chunk_rounds=chunk,
+                            overlap=overlap)
+            if j == ckpt_at:
+                with tempfile.TemporaryDirectory() as d:
+                    path = os.path.join(d, "seg.msgpack")
+                    eng.save_state(path, state)
+                    state = eng.load_state(path, state)
+        assert eng.rounds_done == R
+        for a, b in zip(ref_leaves, jax.tree.leaves(state)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        assert eng.history == ref_eng.history
+
+    check()
+
+
+def test_overlap_toggle_adds_no_steady_state_recompiles(task):
+    """JitCacheWatch pin: once both schedules are warm, toggling
+    ``overlap`` per run switches between two cached chunk programs —
+    zero new compiles, zero retraces."""
+    from repro.obs import JitCacheWatch
+
+    algo = DSFLAlgorithm(apply_tiny_mlp, HP)
+    eng = FedEngine(algo)
+    with JitCacheWatch() as watch:
+        for overlap in (False, True):        # warm both chunk programs
+            state = eng.init(_init, task)
+            eng.run(state, task, rounds=R, chunk_rounds=3, overlap=overlap)
+        watch.mark()
+        for overlap in (False, True, False, True):
+            state = eng.init(_init, task)
+            eng.run(state, task, rounds=R, chunk_rounds=3, overlap=overlap)
+        watch.assert_no_new_compiles("after overlap toggle warmup")
 
 
 # ------------------------------------------------------ RNG fast-forward ----
