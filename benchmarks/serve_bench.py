@@ -17,6 +17,15 @@ boundary; the measured swap latency (checkpointed params -> serving
 buffers, block_until_ready) and the version stamps observed on responses
 before/after land in the report.
 
+Fusion: the same request trace served four ways — single-insert vs
+batched same-bucket prefill, and fused decode chunks d in {1, 4, 16} —
+with every configuration's tokens asserted identical in the same run.
+The d=16 run pays one host sync per 16 decode steps instead of one per
+token, and the batched insert one compiled prefill shot per same-bucket
+group instead of one per request; the section records wall time, virtual
+throughput, dispatch counts, and the compile sets (the prefill compile
+set must be inside the bucket set — the 5/7 non-bucket leak regression).
+
 Emits ``BENCH_serve.json`` (cwd) and returns CSV rows for `benchmarks.run`
 (key ``serve``).
 
@@ -38,6 +47,7 @@ from repro.core.engine import FedEngine
 from repro.core.llm_algorithms import LLMDSFLAlgorithm
 from repro.core.llm_dsfl import LLMDsflHP
 from repro.data.pipeline import build_lm_task
+from repro.launch import platform
 from repro.models.api import model_init
 from repro.obs import RunProvenance
 from repro.serve import (AdmissionQueue, LoadSpec, Request, ServeEngine,
@@ -66,9 +76,10 @@ def bench_grid(fast: bool) -> dict:
     for slots in slot_counts:
         engine = ServeEngine(cfg, params, slots=slots, seq_budget=BUDGET,
                              buckets=BUCKETS)
-        # warmup: compile the decode step and every prefill bucket, so cell
-        # wall-times measure steady-state serving, not XLA
-        for i, n in enumerate(BUCKETS):
+        # warmup: compile the decode step and every prefill bucket (incl.
+        # the short-prompt bucket-1 fallback), so cell wall-times measure
+        # steady-state serving, not XLA
+        for i, n in enumerate(engine.buckets):
             while not engine.free_slots():
                 engine.step()
             engine.insert(Request(id=-1 - i, tokens=tuple(range(1, n + 1)),
@@ -78,7 +89,7 @@ def bench_grid(fast: bool) -> dict:
         engine.pop_completed()
         for rate in rates:
             engine.reset()
-            queue = AdmissionQueue(buckets=BUCKETS, timeout=2.0,
+            queue = AdmissionQueue(buckets=engine.buckets, timeout=2.0,
                                    max_queue=4 * slots)
             spec = LoadSpec(n_requests=n_requests, rate=rate,
                             prompt_len=(4, 40), max_new=(4, 12),
@@ -95,6 +106,90 @@ def bench_grid(fast: bool) -> dict:
     return {"arch": ARCH, "backend": jax.default_backend(),
             "step_cost_virtual_s": STEP_COST,
             "prefill_cost_virtual_s": PREFILL_COST, "cells": cells}
+
+
+FUSION_CONFIGS = {
+    # name -> (decode_chunk, batch_insert)
+    "single_d1": (1, False),
+    "batched_d1": (1, True),
+    "batched_d4": (4, True),
+    "batched_d16": (16, True),
+}
+
+
+def bench_fusion(fast: bool) -> dict:
+    """The fused fast paths on ONE request trace: single-insert vs batched
+    same-bucket prefill, and decode chunks d in {1, 4, 16}.  The queue is
+    unbounded (no shed) so every configuration serves the identical
+    request set, and the generated tokens are asserted identical across
+    all configurations in the same run — the fusion is pure schedule, zero
+    semantics.  Wall time is best-of-``reps`` per configuration with the
+    jit caches warmed by a throwaway first pass."""
+    slots = 4
+    n_requests = 24 if fast else 96
+    reps = 2 if fast else 3
+    cfg = get_config(ARCH).smoke()
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, slots=slots, seq_budget=BUDGET,
+                         buckets=BUCKETS)
+    # uniform bucket-length prompts and a generation length whose decode
+    # step count (max_new - 1 = 32) is chunk-aligned for d in {4, 16}: the
+    # regime the fusion targets (long steady decodes), where a finished
+    # lane never idles inside a chunk it didn't need.  Ragged short
+    # generations are the grid bench's territory.
+    spec = LoadSpec(n_requests=n_requests, rate=8.0, prompt_len=(8, 8),
+                    max_new=(33, 33), vocab=cfg.vocab, seed=23)
+
+    def one_run(decode_chunk, batch_insert):
+        engine.reset()
+        queue = AdmissionQueue(buckets=engine.buckets)   # unbounded: no shed
+        steps0, disp0, shots0 = (engine.n_steps, engine.n_dispatches,
+                                 engine.n_prefill_shots)
+        rep = run_load(engine, queue, spec,
+                       step_cost=STEP_COST, prefill_cost=PREFILL_COST,
+                       decode_chunk=decode_chunk, batch_insert=batch_insert)
+        tokens = {r.id: r.tokens for r in rep.pop("responses")}
+        assert rep["shed"] == 0 and rep["completed"] == n_requests, rep
+        rep["decode_steps"] = engine.n_steps - steps0
+        rep["decode_dispatches"] = engine.n_dispatches - disp0
+        rep["prefill_shots"] = engine.n_prefill_shots - shots0
+        return rep, tokens
+
+    cells, tokens_by_config = {}, {}
+    for name, (d, batched) in FUSION_CONFIGS.items():
+        best, tokens = None, None
+        for _ in range(1 + reps):       # first pass warms the jit caches
+            rep, tokens = one_run(d, batched)
+            if best is None or rep["wall_s"] < best["wall_s"]:
+                best = rep
+        tokens_by_config[name] = tokens
+        cells[name] = {
+            "decode_chunk": d, "batch_insert": batched,
+            "n_requests": n_requests, "tokens": best["tokens"],
+            "wall_s": best["wall_s"],
+            "makespan_virtual_s": best["makespan_virtual_s"],
+            "throughput_tok_per_virtual_s":
+                best["throughput_tok_per_virtual_s"],
+            "throughput_tok_per_wall_s": best["throughput_tok_per_wall_s"],
+            "decode_steps": best["decode_steps"],
+            "decode_dispatches": best["decode_dispatches"],
+            "prefill_shots": best["prefill_shots"],
+        }
+    base = tokens_by_config["single_d1"]
+    identical = all(toks == base for toks in tokens_by_config.values())
+    assert identical, "fused paths changed tokens"
+    # the bucket-leak regression: every compiled prefill length (single and
+    # batched) must be a bucket — lengths like 5 and 7 must never compile
+    compiles = engine.compile_counts()
+    prefill_lens = set(compiles["prefill"]) | {
+        int(k.split("x")[0]) for k in compiles["prefill_batch"]}
+    assert prefill_lens <= set(engine.buckets), (prefill_lens, engine.buckets)
+    return {"arch": ARCH, "slots": slots, "reps": reps,
+            "step_cost_virtual_s": STEP_COST,
+            "prefill_cost_virtual_s": PREFILL_COST,
+            "tokens_identical": identical,
+            "compiles": compiles, "buckets": list(engine.buckets),
+            "cells": cells}
 
 
 def bench_swap(fast: bool) -> dict:
@@ -143,25 +238,40 @@ def bench_swap(fast: bool) -> dict:
                 srv.compile_counts() != compiles_before}
 
 
+def _sec(v) -> str:
+    """Format a latency percentile; empty series are None (JSON null), not
+    a -1.0 sentinel."""
+    return "n/a" if v is None else f"{v:.3f}s"
+
+
 def run(fast: bool = True):
     """benchmarks.run entry: (name, us_per_call, derived) rows +
     BENCH_serve.json side effect."""
     grid = bench_grid(fast)
+    fusion = bench_fusion(fast)
     swap = bench_swap(fast)
     with open(OUT_JSON, "w") as f:
         # provenance header: which commit/jax/backend produced these numbers
         json.dump({"provenance": RunProvenance.collect().asdict(),
-                   "grid": grid, "swap": swap}, f, indent=2)
+                   "grid": grid, "fusion": fusion, "swap": swap}, f, indent=2)
 
     rows = []
     for key, c in grid["cells"].items():
         # us_per_call column = measured wall time per generated token
         tok_us = (1e6 * c["wall_s"] / c["tokens"]) if c["tokens"] else -1.0
         rows.append((f"serve_{key}", tok_us,
-                     f"p50={c['latency_p50_s']:.3f}s "
-                     f"p99={c['latency_p99_s']:.3f}s(virtual) "
+                     f"p50={_sec(c['latency_p50_s'])} "
+                     f"p99={_sec(c['latency_p99_s'])}(virtual) "
                      f"tok/s={c['throughput_tok_per_virtual_s']:.1f} "
                      f"shed={c['shed']}/{c['n_requests']}"))
+    for key, c in fusion["cells"].items():
+        tok_us = (1e6 * c["wall_s"] / c["tokens"]) if c["tokens"] else -1.0
+        rows.append((f"serve_fusion_{key}", tok_us,
+                     f"chunk={c['decode_chunk']} "
+                     f"batch_insert={c['batch_insert']} "
+                     f"dispatches={c['decode_dispatches']} "
+                     f"prefill_shots={c['prefill_shots']} "
+                     f"wall={c['wall_s']:.3f}s"))
     rows.append(("serve_weight_swap", 1e3 * swap["swap_ms_mean"],
                  f"max={swap['swap_ms_max']:.1f}ms n={swap['n_swaps']} "
                  f"v{swap['version_before']}->v{swap['version_after']} "
@@ -174,15 +284,21 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI tier: 2x2 grid, 32 requests/cell, 2 rounds of "
                          "train-while-serving; asserts the report is "
-                         "complete and swap-free of recompiles")
+                         "complete, the swap recompile-free, and the fused "
+                         "paths token-identical and faster")
+    platform.add_args(ap)
     args = ap.parse_args(argv)
+    # preset before backend init: XLA_FLAGS are read once
+    platform.from_args(args)
     print("name,us_per_call,derived")
     for name, us, derived in run(fast=args.smoke):
         print(f"{name},{us:.1f},{derived}", flush=True)
     with open(OUT_JSON) as f:
         bench = json.load(f)
     cells, swap = bench["grid"]["cells"], bench["swap"]
+    fusion = bench["fusion"]
     print(f"wrote {OUT_JSON}: {len(cells)} grid cells, "
+          f"{len(fusion['cells'])} fusion configs, "
           f"{swap['n_swaps']} swaps ({swap['swap_ms_mean']:.1f} ms mean)")
     if args.smoke:
         slot_counts = {c["slots"] for c in cells.values()}
@@ -196,6 +312,17 @@ def main(argv=None) -> int:
         assert swap["n_swaps"] >= 2, swap
         assert not swap["recompiles_from_swap"], swap
         assert swap["version_after"] == swap["rounds"], swap
+        # fusion: tokens identical across every config (asserted again here
+        # from the written report), batched prefill at least matches the
+        # single-insert virtual throughput, and the 16-step fused chunk
+        # beats per-token dispatch on wall time for the same trace
+        fc = fusion["cells"]
+        assert fusion["tokens_identical"], fusion
+        assert fc["batched_d1"]["throughput_tok_per_virtual_s"] >= \
+            fc["single_d1"]["throughput_tok_per_virtual_s"], fc
+        assert fc["batched_d16"]["wall_s"] < fc["batched_d1"]["wall_s"], fc
+        assert fc["batched_d16"]["decode_dispatches"] < \
+            fc["batched_d1"]["decode_dispatches"], fc
     print("OK")
     return 0
 

@@ -4,7 +4,13 @@ continuous-batching `ServeEngine` (ring-buffer KV caches for dense,
 O(1) SSM state for mamba) — see ROADMAP.md "Serving" for the API and
 `repro.launch.serve --lockstep` for the old whole-batch baseline.
 
-  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b
+``--decode-chunk d`` fuses d decode steps into one compiled scan (one
+host sync per chunk) and ``--batch-insert`` admits the whole same-bucket
+prompt group through one compiled batched prefill — both paths are
+token-identical to the step-at-a-time defaults.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b \
+      --decode-chunk 8 --batch-insert
 """
 import argparse
 
@@ -16,10 +22,18 @@ def main():
     ap.add_argument("--arch", default="mamba2-2.7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="fused decode steps per dispatch (1 = per-token)")
+    ap.add_argument("--batch-insert", action="store_true",
+                    help="one compiled prefill shot per same-bucket group")
     args = ap.parse_args()
-    serve_mod.main(["--arch", args.arch, "--smoke",
-                    "--batch", str(args.batch), "--prompt-len", "32",
-                    "--gen", str(args.gen)])
+    argv = ["--arch", args.arch, "--smoke",
+            "--batch", str(args.batch), "--prompt-len", "32",
+            "--gen", str(args.gen),
+            "--decode-chunk", str(args.decode_chunk)]
+    if args.batch_insert:
+        argv.append("--batch-insert")
+    serve_mod.main(argv)
 
 
 if __name__ == "__main__":

@@ -8,9 +8,13 @@ end-to-end on CPU.
 
 The default path drives `repro.serve.ServeEngine` (slot-based continuous
 batching: requests with different prompt lengths join and leave the decode
-batch without recompiling).  ``--lockstep`` runs the pre-subsystem
-whole-batch baseline — one prefill, all requests decoding in lockstep —
-kept because tests pin ServeEngine token-identical to it.
+batch without recompiling).  ``--decode-chunk d`` folds d decode steps
+into one fused dispatch (one host sync per chunk) and ``--batch-insert``
+admits same-bucket request groups through one compiled batched prefill —
+both token-identical to the step-at-a-time defaults.  ``--lockstep`` runs
+the pre-subsystem whole-batch baseline — one prefill, all requests
+decoding in lockstep — kept because tests pin ServeEngine token-identical
+to it.
 """
 from __future__ import annotations
 
@@ -55,10 +59,13 @@ def steady_ms_per_step(times) -> float:
     return 1e3 * sum(steady) / max(len(steady), 1)
 
 
-def serve_continuous(cfg, params, prompts, gen: int, seq_budget: int):
+def serve_continuous(cfg, params, prompts, gen: int, seq_budget: int, *,
+                     decode_chunk: int = 1, batch_insert: bool = False):
     """The same workload through the continuous-batching subsystem: each
     prompt is a request; slots = number of requests so everything is
-    admitted immediately.  Returns (responses by id, per-step seconds)."""
+    admitted immediately.  ``decode_chunk``/``batch_insert`` select the
+    fused fast paths (token-identical to the defaults).  Returns
+    (responses by id, list of (seconds, decode steps) per dispatch)."""
     engine = ServeEngine(cfg, params, slots=len(prompts),
                          seq_budget=seq_budget)
     queue = AdmissionQueue(buckets=engine.buckets)
@@ -67,16 +74,33 @@ def serve_continuous(cfg, params, prompts, gen: int, seq_budget: int):
     t0 = time.perf_counter()
     for toks in prompts:
         queue.submit(toks, gen, now=time.perf_counter() - t0)
-    for req in queue.admit(time.perf_counter() - t0,
-                           len(engine.free_slots())):
-        engine.insert(req, time.perf_counter() - t0)
+    if batch_insert:
+        while True:
+            reqs = queue.admit(time.perf_counter() - t0,
+                               len(engine.free_slots()), group=True)
+            if not reqs:
+                break
+            engine.insert_batch(reqs, time.perf_counter() - t0)
+    else:
+        for req in queue.admit(time.perf_counter() - t0,
+                               len(engine.free_slots())):
+            engine.insert(req, time.perf_counter() - t0)
     times = []
     while engine.n_active:
+        before = engine.n_steps
         ts = time.perf_counter()
-        engine.step(time.perf_counter() - t0)
-        times.append(time.perf_counter() - ts)
+        engine.step(time.perf_counter() - t0, decode_chunk=decode_chunk)
+        times.append((time.perf_counter() - ts, engine.n_steps - before))
     by_id = {r.id: r for r in engine.pop_completed()}
     return [by_id[i] for i in sorted(by_id)], times
+
+
+def steady_ms_per_decode_step(timed_steps) -> float:
+    """Mean decode ms per accounted step from ``serve_continuous`` timing
+    pairs, excluding the first (compile) dispatch."""
+    steady = timed_steps[1:] if len(timed_steps) > 1 else timed_steps
+    n = sum(k for _, k in steady)
+    return 1e3 * sum(dt for dt, _ in steady) / max(n, 1)
 
 
 def main(argv=None):
@@ -89,6 +113,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lockstep", action="store_true",
                     help="pre-subsystem whole-batch baseline path")
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="fuse this many decode steps into one compiled "
+                         "scan (one host sync per chunk; token-identical)")
+    ap.add_argument("--batch-insert", action="store_true",
+                    help="admit same-bucket request groups through one "
+                         "compiled batched prefill (token-identical)")
     platform.add_args(ap)
     obs_cli.add_args(ap)
     args = ap.parse_args(argv)
@@ -122,12 +152,15 @@ def run(args):
         return
 
     prompts = [tuple(int(t) for t in row) for row in jax.device_get(tokens)]
-    responses, times = serve_continuous(cfg, params, prompts, args.gen,
-                                        seq_budget)
+    responses, times = serve_continuous(
+        cfg, params, prompts, args.gen, seq_budget,
+        decode_chunk=args.decode_chunk, batch_insert=args.batch_insert)
     n_tok = sum(len(r.tokens) for r in responses)
     print(f"[continuous] {len(responses)} requests, {n_tok} tokens; "
-          f"decode {steady_ms_per_step(times):.1f} ms/step "
-          f"(weights v{responses[0].weights_version})")
+          f"decode {steady_ms_per_decode_step(times):.1f} ms/step over "
+          f"{len(times)} dispatches (chunk={args.decode_chunk}, "
+          f"batch_insert={args.batch_insert}, "
+          f"weights v{responses[0].weights_version})")
     print(jnp.asarray(responses[0].tokens))
 
 

@@ -28,17 +28,19 @@ import numpy as np
 
 
 # ------------------------------------------------------------- percentiles ---
-def percentile(xs: Sequence[float], q: float) -> float:
-    """Exact q-th percentile (linear interpolation); -1.0 on empty input —
-    the sentinel the serving reports have always used."""
+def percentile(xs: Sequence[float], q: float, empty: Optional[float] = -1.0
+               ) -> float:
+    """Exact q-th percentile (linear interpolation); ``empty`` on empty
+    input.  The serving reports pass ``empty=None`` so an empty series
+    serializes as JSON null instead of a fake -1.0 latency."""
     if not len(xs):
-        return -1.0
+        return empty
     return float(np.percentile(np.asarray(xs, np.float64), q))
 
 
-def percentiles(xs: Sequence[float], qs: Sequence[float] = (50, 90, 99)
-                ) -> dict:
-    return {f"p{q:g}": percentile(xs, q) for q in qs}
+def percentiles(xs: Sequence[float], qs: Sequence[float] = (50, 90, 99),
+                empty: Optional[float] = -1.0) -> dict:
+    return {f"p{q:g}": percentile(xs, q, empty=empty) for q in qs}
 
 
 # ------------------------------------------------------------- instruments ---

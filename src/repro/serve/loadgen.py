@@ -54,12 +54,22 @@ def draw_arrivals(spec: LoadSpec) -> list:
 
 
 def run_load(engine: ServeEngine, queue: AdmissionQueue, spec: LoadSpec, *,
-             step_cost: float = 0.01, prefill_cost: float = 0.05) -> dict:
+             step_cost: float = 0.01, prefill_cost: float = 0.05,
+             decode_chunk: int = 1, batch_insert: bool = False) -> dict:
     """Drive ``engine`` through the whole workload and aggregate the result.
 
-    The virtual clock advances by ``prefill_cost`` per admitted request and
-    ``step_cost`` per decode step; when the server is idle it jumps to the
-    next arrival.  Returns the summary dict (see `summarize`) plus the raw
+    The virtual clock advances by ``prefill_cost`` per compiled prefill
+    shot (one per request, or one per same-bucket group with
+    ``batch_insert=True``) and ``step_cost`` per accounted decode step;
+    when the server is idle it jumps to the next arrival.
+
+    ``decode_chunk=d`` runs the fused d-step decode path: one dispatch and
+    one host sync per chunk, mid-chunk finishers stamped at their true
+    virtual sub-step, and the clock advanced by exactly the sub-steps the
+    per-token loop would have executed.  ``batch_insert=True`` admits
+    same-bucket groups (`AdmissionQueue.admit(group=True)`) through
+    `ServeEngine.insert_batch`.  Both paths are token-identical to the
+    defaults.  Returns the summary dict (see `summarize`) plus the raw
     ``responses`` list.
     """
     pending = draw_arrivals(spec)
@@ -73,12 +83,22 @@ def run_load(engine: ServeEngine, queue: AdmissionQueue, spec: LoadSpec, *,
             t, toks, m = pending[next_arrival]
             queue.submit(toks, m, now=t)
             next_arrival += 1
-        for req in queue.admit(now, len(engine.free_slots())):
-            now += prefill_cost
-            engine.insert(req, now)
+        if batch_insert:
+            while True:
+                reqs = queue.admit(now, len(engine.free_slots()), group=True)
+                if not reqs:
+                    break
+                now += prefill_cost     # one compiled shot per group
+                engine.insert_batch(reqs, now)
+        else:
+            for req in queue.admit(now, len(engine.free_slots())):
+                now += prefill_cost
+                engine.insert(req, now)
         if engine.n_active:
-            now += step_cost
-            engine.step(now)
+            steps_before = engine.n_steps
+            now += step_cost            # sub-step 0 happens at this time
+            engine.step(now, decode_chunk=decode_chunk, step_dt=step_cost)
+            now += (engine.n_steps - steps_before - 1) * step_cost
             responses.extend(engine.pop_completed())
         elif next_arrival < len(pending):
             now = pending[next_arrival][0]   # idle: jump to the next arrival
@@ -99,16 +119,20 @@ def summarize(responses, *, makespan: float, wall_s: float,
     """p50/p90/p99 latency + time-to-first-token (virtual seconds),
     throughput (generated tokens per virtual second, and per wall second),
     and exact shed accounting.  Percentiles all come from the one shared
-    implementation in `repro.obs.metrics`; shed requests' queue-wait time
-    is accounted (``queue_wait_*`` spans served *and* shed responses, and
-    ``shed_wait_*`` reports how long dropped requests sat before being
-    shed) rather than silently vanishing from the latency picture."""
+    implementation in `repro.obs.metrics`; an empty series (e.g. the shed
+    percentiles of a run that shed nothing) reports ``None`` — JSON null —
+    not a -1.0 sentinel, so downstream report code must guard for it.
+    Shed requests' queue-wait time is accounted (``queue_wait_*`` spans
+    served *and* shed responses, and ``shed_wait_*`` reports how long
+    dropped requests sat before being shed) rather than silently vanishing
+    from the latency picture."""
     done = [r for r in responses if not r.shed]
     shed = [r for r in responses if r.shed]
     n_tokens = sum(len(r.tokens) for r in done)
 
     def pcts(prefix, xs):
-        return {f"{prefix}_{k}_s": v for k, v in percentiles(xs).items()}
+        return {f"{prefix}_{k}_s": v
+                for k, v in percentiles(xs, empty=None).items()}
 
     out = {
         "completed": len(done),
@@ -118,7 +142,8 @@ def summarize(responses, *, makespan: float, wall_s: float,
         "wall_s": wall_s,
         **pcts("latency", [r.latency for r in done]),
         **pcts("ttft", [r.ttft for r in done]),
-        "queue_delay_p50_s": percentile([r.queue_delay for r in done], 50),
+        "queue_delay_p50_s": percentile([r.queue_delay for r in done], 50,
+                                        empty=None),
         # every submitted request's time-in-queue, shed included — the
         # number that shows overload instead of hiding it in the shed bin
         **pcts("queue_wait", [r.queue_wait for r in responses]),
@@ -134,6 +159,8 @@ def summarize(responses, *, makespan: float, wall_s: float,
         out["n_admitted"] = queue.n_admitted
     if engine is not None:
         out["decode_steps"] = engine.n_steps
+        out["decode_dispatches"] = engine.n_dispatches
+        out["prefill_shots"] = engine.n_prefill_shots
         out["compiles"] = engine.compile_counts()
         out["weights_version"] = engine.version
     return out

@@ -131,16 +131,26 @@ class AdmissionQueue:
         return req
 
     # ---------------------------------------------------------- admission ----
-    def admit(self, now: float, free_slots: int) -> list:
+    def admit(self, now: float, free_slots: int, group: bool = False) -> list:
         """Pop up to ``free_slots`` requests, oldest-arrival first across
         buckets (which preserves FIFO within every bucket), after shedding
-        everything past ``timeout``."""
+        everything past ``timeout``.
+
+        ``group=True`` is the batched-prefill mode: every returned request
+        shares the bucket of the globally oldest queued request, popped
+        FIFO from that bucket only — a group `ServeEngine.insert_batch`
+        can admit in one compiled shot.  Other buckets wait for the next
+        ``admit`` call, so per-bucket FIFO and oldest-bucket-first order
+        both survive grouping (hypothesis-pinned)."""
         self.shed_expired(now)
         out = []
+        bucket = None
         while len(out) < free_slots:
-            req = self._pop_oldest()
+            req = self._pop_oldest(bucket)
             if req is None:
                 break
+            if group and bucket is None:
+                bucket = bucket_of(req.prompt_len, self.buckets)
             self.n_admitted += 1
             out.append(req)
         if out:
@@ -173,7 +183,12 @@ class AdmissionQueue:
                             waited_s=r.queue_wait)
         return dropped
 
-    def _pop_oldest(self) -> Optional[Request]:
+    def _pop_oldest(self, bucket: Optional[int] = None) -> Optional[Request]:
+        """Oldest queued request — across buckets, or (grouped admission)
+        from ``bucket`` only."""
+        if bucket is not None:
+            q = self._q.get(bucket)
+            return q.popleft() if q else None
         best = None
         for b, q in self._q.items():
             if q and (best is None or q[0].arrival < self._q[best][0].arrival):

@@ -18,7 +18,14 @@ engine's weights are swapped in place:
     the live client stack);
   * responses emitted after the swap are stamped with
     ``weights_version = rounds_done``, so a client can tell which round's
-    model produced its tokens.
+    model produced its tokens;
+  * swaps land only at decode-**chunk** boundaries, mirroring the
+    `on_chunk` discipline on the training side: `ServeEngine.step` syncs
+    its fused chunk before returning, so a swap can never interleave with
+    an in-flight chunk — every token inside one chunk comes from a single
+    weights version, and a mid-request swap at a chunk boundary is
+    token-identical to the same swap between single steps (pinned in
+    tests/test_serve.py).
 
 `swap_from_checkpoint` is the offline variant: load a params pytree saved
 with `repro.checkpoint.save_pytree` and hot-swap it into a running server.
@@ -58,7 +65,9 @@ class WeightSync:
             self.serve.swap_weights(params, version=rounds_done)
             jax.block_until_ready(self.serve.params)
             dt = time.perf_counter() - t0
-            sp.set(swap_s=dt)
+            # the decode-chunk boundary the swap landed at: every token of
+            # a fused chunk decodes under one weights version
+            sp.set(swap_s=dt, serve_steps=self.serve.n_steps)
         self.swap_log.append((int(rounds_done), dt))
         reg = obs.current_registry()
         if reg is not None:

@@ -4,16 +4,27 @@ The load-bearing pins:
   * slot-engine parity — N staggered requests through one shared engine are
     token-identical to serving each alone, and (attention archs, bucket-exact
     prompts) to the pre-subsystem lockstep baseline in `launch.serve`;
-  * no recompiles after warmup — the decode step compiles exactly once and
-    each prefill bucket exactly once, no matter how many requests are
-    admitted/evicted (asserted through the jit cache size);
+  * fused-decode parity — ``step(decode_chunk=d)`` is token-identical to d
+    single steps on both archs, including mid-chunk finishers (max-token and
+    EOS), with identical virtual timestamps and accounted step counts;
+  * batched-prefill parity — ``insert_batch`` (including a padded
+    batch-size class) is token-identical to inserting each request alone;
+  * no recompiles after warmup — the decode step compiles exactly once, each
+    chunk size exactly once, each prefill bucket exactly once (short prompts
+    share the bucket-1 program: the prefill compile set IS the bucket set),
+    and each (bucket, batch-class) exactly once, no matter how many requests
+    are admitted/evicted (asserted through the jit cache size);
   * hot-swap — a live `FedEngine` run swaps the server's weights at chunk
-    boundaries: responses before/after carry the old/new version stamps and
-    the swap adds zero compiles;
+    boundaries: responses before/after carry the old/new version stamps, the
+    swap adds zero compiles, and a mid-request swap at a fused-chunk
+    boundary is token-identical to the same swap between single steps;
   * queue invariants (hypothesis) — every submitted request is accounted
-    exactly once, admission never exceeds the free-slot budget, FIFO holds
-    within each bucket.
+    exactly once, admission (grouped or not) never exceeds the free-slot
+    budget, FIFO holds within each bucket, and every grouped-admit batch is
+    single-bucket.
 """
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -119,6 +130,69 @@ def test_engine_matches_lockstep_baseline(qwen_params):
         assert got[i] == tuple(int(t) for t in base[i])
 
 
+# ------------------------------------------------------------ fused decode --
+def _drive_chunked(cfg, params, prompts, max_news, d, eos_id=None, dt=0.5):
+    """All requests resident from t=0 (slots == #requests), decoded with
+    ``decode_chunk=d`` under the loadgen's virtual-clock discipline: sub-step
+    j of a chunk happens at the same virtual time the d=1 loop's j-th step
+    would."""
+    eng = ServeEngine(cfg, params, slots=len(prompts), seq_budget=BUDGET,
+                      buckets=BUCKETS, eos_id=eos_id)
+    for i, (p, m) in enumerate(zip(prompts, max_news)):
+        eng.insert(Request(id=i, tokens=p, max_new_tokens=m), now=0.0)
+    out, now = list(eng.pop_completed()), 0.0   # EOS can finish at insert
+    while eng.n_active:
+        before = eng.n_steps
+        now += dt
+        out.extend(eng.step(now, decode_chunk=d, step_dt=dt))
+        now += (eng.n_steps - before - 1) * dt
+    return {r.id: r for r in out}, eng
+
+
+@pytest.mark.parametrize("arch", ["qwen", "mamba"])
+def test_fused_decode_chunk_matches_single_step(arch, qwen_params,
+                                                mamba_params):
+    """decode_chunk=d is pure schedule: tokens, first-token/finish
+    timestamps, and accounted step counts are all identical to d single
+    steps — while the device round-trips collapse by ~d.  The workload is
+    chosen so requests finish mid-chunk (max_new 2/6/9 against d=4 and
+    d=16) and prompt tails cross chunk boundaries."""
+    cfg, params = ((QWEN, qwen_params) if arch == "qwen"
+                   else (MAMBA, mamba_params))
+    prompts = _prompts(cfg.vocab, lens=(3, 12, 20), seed=5)
+    max_news = (2, 6, 9)
+    base, beng = _drive_chunked(cfg, params, prompts, max_news, d=1)
+    for d in (4, 16):
+        got, eng = _drive_chunked(cfg, params, prompts, max_news, d=d)
+        assert eng.n_steps == beng.n_steps          # accounted sub-steps
+        assert eng.n_dispatches < beng.n_dispatches  # but far fewer syncs
+        for i in base:
+            assert got[i].tokens == base[i].tokens
+            assert got[i].first_token_at == base[i].first_token_at
+            assert got[i].finished_at == base[i].finished_at
+
+
+def test_fused_decode_eos_finish_mid_chunk(qwen_params):
+    """A lane hitting EOS inside a fused chunk freezes exactly where the
+    per-step loop would have evicted it.  Request 0 carries a prompt tail,
+    so its first emission — chosen as the EOS — lands at sub-step 3 of the
+    chunk; request 1 keeps the chunk decoding past that finish, exercising
+    the frozen-lane masking."""
+    prompts = _prompts(QWEN.vocab, lens=(12, 8), seed=5)
+    max_news = (8, 8)
+    free_run, _ = _drive_chunked(QWEN, qwen_params, prompts, max_news, d=1)
+    eos = free_run[0].tokens[0]              # req 0 finishes on first emit
+    base, _ = _drive_chunked(QWEN, qwen_params, prompts, max_news, d=1,
+                             eos_id=eos)
+    assert len(base[0].tokens) < 8           # EOS cut generation short
+    for d in (4, 16):
+        got, eng = _drive_chunked(QWEN, qwen_params, prompts, max_news, d=d,
+                                  eos_id=eos)
+        for i in base:
+            assert got[i].tokens == base[i].tokens
+            assert got[i].finished_at == base[i].finished_at
+
+
 # ------------------------------------------------------------- no recompile --
 def test_no_recompile_after_warmup(qwen_params):
     """Admission, eviction, and slot churn never trigger a recompile: after
@@ -142,6 +216,105 @@ def test_no_recompile_after_warmup(qwen_params):
         eng.step()
     _drain(eng)
     assert eng.compile_counts() == pinned
+
+
+def test_decode_chunk_toggle_never_recompiles(qwen_params):
+    """Each chunk size keys its own jit entry: after one request per size,
+    interleaving d in {1, 4, 8} across further requests adds nothing."""
+    eng = ServeEngine(QWEN, qwen_params, slots=2, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    prompts = iter(_prompts(QWEN.vocab, lens=(12,) * 12, seed=9))
+    ids = iter(range(100))
+
+    def serve_once(d):
+        while not eng.free_slots():
+            eng.step(decode_chunk=d)
+        eng.insert(Request(id=next(ids), tokens=next(prompts),
+                           max_new_tokens=6))
+        while eng.n_active:
+            eng.step(decode_chunk=d)
+        eng.pop_completed()
+
+    for d in (1, 4, 8):
+        serve_once(d)
+    pinned = eng.compile_counts()
+    assert pinned["step"] == 1
+    assert pinned["decode_chunk"] == {4: 1, 8: 1}
+    for d in (8, 1, 4, 8, 4, 1):
+        serve_once(d)
+    assert eng.compile_counts() == pinned
+
+
+def test_short_prompts_share_the_length1_prefill(qwen_params):
+    """The bucket-leak regression: prompts shorter than every configured
+    bucket prefill through the always-present length-1 program — one
+    compile total, not one per distinct short length — and decode
+    token-identically to an engine with an exact-length bucket."""
+    eng = ServeEngine(QWEN, qwen_params, slots=2, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    assert eng.buckets == (1, 8, 16)
+    for i, p in enumerate(_prompts(QWEN.vocab, lens=(3, 5, 7), seed=4)):
+        while not eng.free_slots():
+            eng.step()
+        eng.insert(Request(id=i, tokens=p, max_new_tokens=4))
+    got = {r.id: r.tokens for r in _drain(eng)}
+    counts = eng.compile_counts()
+    assert set(counts["prefill"]) == {1}            # not {3, 5, 7}
+    assert set(counts["prefill"]) <= set(eng.buckets)
+
+    # fallback parity: length-1 prefix + forced tail == exact-length prefill
+    p5 = _prompts(QWEN.vocab, lens=(3, 5, 7), seed=4)[1]
+    exact = ServeEngine(QWEN, qwen_params, slots=1, seq_budget=BUDGET,
+                        buckets=(5,))
+    exact.insert(Request(id=0, tokens=p5, max_new_tokens=4))
+    (r,) = _drain(exact)
+    assert r.tokens == got[1]
+
+
+# ------------------------------------------------------------ batched insert --
+@pytest.mark.parametrize("arch", ["qwen", "mamba"])
+def test_insert_batch_matches_single_insert(arch, qwen_params, mamba_params):
+    """One compiled shot for a same-bucket group — padded up to the
+    power-of-two batch class — is token-identical to inserting each request
+    alone, and the (bucket, class) program is shared across groups."""
+    cfg, params = ((QWEN, qwen_params) if arch == "qwen"
+                   else (MAMBA, mamba_params))
+    prompts = _prompts(cfg.vocab, lens=(9, 12, 15), seed=6)
+    max_new = 5
+    solo = [_solo(cfg, params, p, max_new) for p in prompts]
+
+    eng = ServeEngine(cfg, params, slots=4, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    claimed = eng.insert_batch(
+        [Request(id=i, tokens=p, max_new_tokens=max_new)
+         for i, p in enumerate(prompts)])
+    assert claimed == [0, 1, 2] and eng.n_prefill_shots == 1
+    got = {r.id: r.tokens for r in _drain(eng)}
+    assert [got[i] for i in range(3)] == solo
+    # m=3 rode the padded class-4 program: one compile per (bucket, class)
+    assert eng.compile_counts()["prefill_batch"] == {"8x4": 1}
+
+    # a full-width group reuses the exact same program
+    eng.insert_batch(
+        [Request(id=10 + i, tokens=p, max_new_tokens=2)
+         for i, p in enumerate(_prompts(cfg.vocab,
+                                        lens=(8, 9, 10, 11), seed=7))])
+    _drain(eng)
+    assert eng.compile_counts()["prefill_batch"] == {"8x4": 1}
+
+
+def test_insert_batch_validation(qwen_params):
+    eng = ServeEngine(QWEN, qwen_params, slots=2, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    mixed = [Request(id=0, tokens=tuple(range(1, 6)), max_new_tokens=2),
+             Request(id=1, tokens=tuple(range(1, 13)), max_new_tokens=2)]
+    with pytest.raises(ValueError, match="same-bucket"):
+        eng.insert_batch(mixed)
+    many = [Request(id=i, tokens=tuple(range(1, 10)), max_new_tokens=2)
+            for i in range(3)]
+    with pytest.raises(RuntimeError, match="free slots"):
+        eng.insert_batch(many)
+    assert eng.insert_batch([]) == []
 
 
 def test_insert_rejects_over_budget(qwen_params):
@@ -207,6 +380,41 @@ def test_hot_swap_from_live_fed_engine(rng):
     want, _ = algo.eval_params(state)
     jax.tree.map(lambda a, b: np.testing.assert_array_equal(
         np.asarray(a), np.asarray(b)), want, srv.params)
+
+
+@pytest.mark.parametrize("arch", ["qwen", "mamba"])
+def test_hot_swap_lands_at_chunk_boundary(arch, qwen_params, mamba_params):
+    """`step` syncs its fused chunk before returning, so a swap can never
+    interleave with an in-flight chunk: a mid-request swap between chunks
+    is token-identical to the same swap between single steps at the same
+    token index, stamps the same version, and adds zero compiles."""
+    cfg, params = ((QWEN, qwen_params) if arch == "qwen"
+                   else (MAMBA, mamba_params))
+    new = model_init(cfg, jax.random.PRNGKey(9))
+    prompt = _prompts(cfg.vocab, lens=(8,), seed=8)[0]
+
+    def run(d, swap):
+        eng = ServeEngine(cfg, params, slots=1, seq_budget=BUDGET,
+                          buckets=BUCKETS)
+        eng.insert(Request(id=0, tokens=prompt, max_new_tokens=9))
+        while eng.n_steps < 4:                  # 4 decode steps, any chunking
+            eng.step(decode_chunk=d)
+        pinned = eng.compile_counts()
+        if swap:
+            eng.swap_weights(new, version=5)
+        while eng.n_active:
+            eng.step(decode_chunk=d)
+        (r,) = eng.pop_completed()
+        assert eng.compile_counts() == pinned   # swap adds zero compiles
+        return r, eng
+
+    single, _ = run(1, swap=True)
+    chunked, eng = run(4, swap=True)
+    assert chunked.tokens == single.tokens
+    assert chunked.weights_version == single.weights_version == 5
+    # the remaining chunks really decoded under the swapped-in weights
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), new, eng.params)
 
 
 def test_swap_mismatch_names_leaves(qwen_params):
@@ -300,6 +508,78 @@ def test_queue_invariants_property():
             assert got_ids == sorted(got_ids)
 
     run()
+
+
+def test_grouped_admit_property():
+    """admit(group=True) — the batched-prefill grouping mode: every batch
+    is single-bucket and led by the globally oldest queued request, never
+    exceeds the free-slot budget, preserves FIFO within each bucket, and
+    accounts every submitted request exactly once."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    BK = (8, 16)
+    ops = st.lists(st.tuples(st.booleans(),           # submit vs admit
+                             st.integers(1, 40),      # prompt len / free
+                             st.integers(0, 4)),
+                   max_size=60)
+
+    @settings(deadline=None, max_examples=80)
+    @given(ops)
+    def run(events):
+        q = AdmissionQueue(buckets=BK)                # unbounded: no shed
+        pending, admitted, now = [], [], 0.0
+        for is_submit, a, _ in events:
+            now += 0.5                                # arrivals strictly order
+            if is_submit:
+                pending.append(q.submit(tuple(range(a)), 4, now=now))
+            else:
+                free = a % 5
+                got = q.admit(now, free, group=True)
+                assert len(got) <= free               # slot budget holds
+                if got:
+                    buckets = {bucket_of(r.prompt_len, BK) for r in got}
+                    assert len(buckets) == 1          # one bucket per shot
+                    # the group is led by the globally oldest request
+                    oldest = min(pending, key=lambda r: r.arrival)
+                    assert got[0].id == oldest.id
+                    for r in got:
+                        pending.remove(r)
+                    admitted.extend(got)
+        while True:                                   # grouped admits drain
+            got = q.admit(now, 3, group=True)
+            if not got:
+                break
+            assert len({bucket_of(r.prompt_len, BK) for r in got}) == 1
+            admitted.extend(got)
+        assert len(q) == 0
+        ids = [r.id for r in admitted]                # exactly-once
+        assert len(ids) == len(set(ids)) == q.n_submitted == q.n_admitted
+        per_bucket = {}
+        for r in admitted:
+            per_bucket.setdefault(bucket_of(r.prompt_len, BK),
+                                  []).append(r.id)
+        for got_ids in per_bucket.values():           # FIFO within bucket
+            assert got_ids == sorted(got_ids)
+
+    run()
+
+
+def test_no_shed_percentiles_are_json_null(qwen_params):
+    """An empty percentile series (here: the shed-wait stats of a run that
+    shed nothing) reports None — JSON null — not a -1.0 sentinel that a
+    reader could mistake for a measured latency."""
+    spec = LoadSpec(n_requests=6, rate=4.0, prompt_len=(3, 20),
+                    max_new=(2, 4), vocab=QWEN.vocab, seed=7)
+    eng = ServeEngine(QWEN, qwen_params, slots=2, seq_budget=BUDGET,
+                      buckets=BUCKETS)
+    rep = run_load(eng, AdmissionQueue(buckets=eng.buckets), spec)
+    rep.pop("responses")
+    assert rep["shed"] == 0 and rep["completed"] == 6
+    for k in ("shed_wait_p50_s", "shed_wait_p90_s", "shed_wait_p99_s"):
+        assert rep[k] is None
+    json.dumps(rep)                                   # serializable as null
 
 
 def test_queue_timeout_and_overload_shed():
